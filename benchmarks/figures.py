@@ -1,0 +1,212 @@
+"""One function per paper table/figure.  Each returns rows of
+(name, value, derived) and is invoked by benchmarks.run.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core.cost import cost_efficiency_vs_baseline
+from repro.core.dsa import DSAConfig
+from repro.core.dse import (evaluate, optimal_design, optimal_square_design,
+                            pareto, sweep)
+from repro.core.energy import energy_reduction_vs_baseline
+from repro.core.function import standard_pipeline
+from repro.core.latency import LatencyModel
+from repro.core.platforms import PLATFORMS
+from repro.core.scheduler import ClusterSim
+from repro.core.workloads import WORKLOADS
+
+Row = Tuple[str, float, str]
+_LM = LatencyModel()
+
+
+def fig04_breakdown() -> List[Row]:
+    """Runtime breakdown on the CPU baseline: comm share > 55% average."""
+    rows = []
+    comms = []
+    for name, wl in WORKLOADS.items():
+        bd = _LM.pipeline_breakdown(PLATFORMS["Baseline-CPU"], wl)
+        comm = (bd["net"] + bd["io"]) / bd["total"]
+        comms.append(comm)
+        rows.append((f"fig04/{name}/comm_frac", comm,
+                     f"total={bd['total'] * 1e3:.1f}ms"))
+    rows.append(("fig04/mean_comm_frac", float(np.mean(comms)),
+                 "paper: >0.55"))
+    return rows
+
+
+def fig05_tail_cdf() -> List[Row]:
+    """S3 read/write tail: p99/p50 ratios (paper: ~2.1x read, ~1.75x write)."""
+    wl = WORKLOADS["asset_damage"]
+    r50 = _LM.net_read(wl.input_bytes, q=0.50)
+    r99 = _LM.net_read(wl.input_bytes, q=0.99)
+    w50 = _LM.net_write(wl.output_bytes, q=0.50)
+    w99 = _LM.net_write(wl.output_bytes, q=0.99)
+    return [("fig05/read_p99_over_p50", r99 / r50, "paper ~2.1"),
+            ("fig05/write_p99_over_p50", w99 / w50, "paper ~1.75")]
+
+
+def fig07_dse_pareto() -> List[Row]:
+    pts = sweep()
+    best = optimal_design(pts)
+    sq = optimal_square_design(pts)
+    paper = evaluate(DSAConfig())
+    front = pareto([p for p in pts if p.feasible], "power_w")
+    big = evaluate(DSAConfig(pe_x=1024, pe_y=1024, scratchpad_bytes=32 << 20,
+                             mem_bw=38e9))
+    return [
+        ("fig07/configs_swept", float(len(pts)), ">650 in paper"),
+        ("fig07/square_winner_is_128x128_ddr5",
+         float(sq.cfg.pe_x == 128 and sq.cfg.pe_y == 128
+               and sq.cfg.mem_bw == 38e9), sq.cfg.name),
+        ("fig07/paper_point_power_w", evaluate(DSAConfig()).power_w,
+         "paper: 4.2 W"),
+        ("fig07/paper_point_fps_frac_of_square_best",
+         paper.throughput_fps / sq.throughput_fps, ""),
+        ("fig07/1024x1024_feasible", float(big.feasible), "paper: infeasible"),
+        ("fig07/beyond_paper_rect_winner_fps", best.throughput_fps,
+         f"{best.cfg.name} @ {best.power_w:.1f}W"),
+    ]
+
+
+def _mean_speedup(plat: str, **kw) -> float:
+    vals = []
+    for wl in WORKLOADS.values():
+        base = _LM.e2e(PLATFORMS["Baseline-CPU"], wl, **kw)
+        tgt = _LM.e2e(PLATFORMS[plat], wl, **kw)
+        vals.append(base / tgt)
+    return float(np.mean(vals))
+
+
+def fig08_speedup() -> List[Row]:
+    rows = [(f"fig08/speedup/{p}", _mean_speedup(p), "")
+            for p in PLATFORMS if p != "Baseline-CPU"]
+    dsa = _mean_speedup("DSCS-Serverless")
+    rows += [
+        ("fig08/dscs_vs_cpu", dsa, "paper 3.6"),
+        ("fig08/dscs_vs_gpu", dsa / _mean_speedup("GPU"), "paper 2.7"),
+        ("fig08/dscs_vs_ns_arm", dsa / _mean_speedup("NS-ARM"), "paper 3.7"),
+        ("fig08/dscs_vs_ns_fpga", dsa / _mean_speedup("NS-FPGA"), "paper 1.7"),
+    ]
+    return rows
+
+
+def fig09_runtime_breakdown() -> List[Row]:
+    """Bottleneck shift: on DSCS, compute+comm shrink, stack/f3 dominate."""
+    rows = []
+    for plat in ("Baseline-CPU", "GPU", "NS-FPGA", "DSCS-Serverless"):
+        bd = _LM.pipeline_breakdown(PLATFORMS[plat], WORKLOADS["asset_damage"])
+        for k in ("stack", "net", "io", "compute", "driver"):
+            rows.append((f"fig09/asset_damage/{plat}/{k}", bd[k] / bd["total"], ""))
+    dscs = _LM.pipeline_breakdown(PLATFORMS["DSCS-Serverless"],
+                                  WORKLOADS["asset_damage"])
+    rows.append(("fig09/dscs_stack_plus_f3net_frac",
+                 (dscs["stack"] + dscs["net"]) / dscs["total"],
+                 "paper: stack+f3 dominate on DSCS"))
+    return rows
+
+
+def fig10_energy() -> List[Row]:
+    rows = []
+    means = {}
+    for p in PLATFORMS:
+        if p == "Baseline-CPU":
+            continue
+        vals = [energy_reduction_vs_baseline(_LM, wl, p)
+                for wl in WORKLOADS.values()]
+        means[p] = float(np.mean(vals))
+        rows.append((f"fig10/energy_reduction/{p}", means[p], ""))
+    rows.append(("fig10/dscs_vs_ns_fpga_energy",
+                 means["DSCS-Serverless"] / means["NS-FPGA"], "paper 1.9"))
+    return rows
+
+
+def fig11_cost_efficiency() -> List[Row]:
+    rows = []
+    means = {}
+    for p in ("NS-ARM", "NS-FPGA", "DSCS-Serverless", "GPU"):
+        vals = [cost_efficiency_vs_baseline(_LM, wl, p)
+                for wl in WORKLOADS.values()]
+        means[p] = float(np.mean(vals))
+        rows.append((f"fig11/cost_efficiency/{p}", means[p], ""))
+    rows.append(("fig11/dscs_vs_ns_arm", means["DSCS-Serverless"] / means["NS-ARM"],
+                 "paper 3.2"))
+    rows.append(("fig11/dscs_vs_ns_fpga", means["DSCS-Serverless"] / means["NS-FPGA"],
+                 "paper 2.3"))
+    return rows
+
+
+def fig12_throughput() -> List[Row]:
+    pipes = [standard_pipeline(n) for n in
+             ("asset_damage", "content_moderation", "credit_risk")]
+    pipes_cpu = [standard_pipeline(n, accelerate=False) for n in
+                 ("asset_damage", "content_moderation", "credit_risk")]
+    sim = ClusterSim(n_dscs=100, n_cpu=100, seed=0)
+    sim_cpu = ClusterSim(n_dscs=0, n_cpu=100, seed=0)
+    dscs = sim.max_throughput(pipes, sla_s=0.6, duration_s=20)
+    cpu = sim_cpu.max_throughput(pipes_cpu, sla_s=0.6, duration_s=20)
+    return [("fig12/dscs_rps", dscs, "100 DSCS drives"),
+            ("fig12/cpu_rps", cpu, "100 CPU nodes"),
+            ("fig12/throughput_ratio", dscs / cpu, "paper 3.1")]
+
+
+def fig13_batch_sensitivity() -> List[Row]:
+    rows = []
+    for b in (1, 4, 16, 64):
+        rows.append((f"fig13/speedup_batch{b}",
+                     _mean_speedup("DSCS-Serverless", batch=b),
+                     "paper: 3.6 -> 15.9 @64"))
+    return rows
+
+
+def fig14_num_functions() -> List[Row]:
+    rows = []
+    for extra in (0, 1, 2, 3):
+        rows.append((f"fig14/speedup_plus{extra}_funcs",
+                     _mean_speedup("DSCS-Serverless", extra_accel_funcs=extra),
+                     "paper: 3.6 -> 8.1 @+3"))
+    return rows
+
+
+def fig15_pcie_sensitivity() -> List[Row]:
+    rows = []
+    base = None
+    for lanes in ("gen3x1", "gen3x2", "gen3x4", "gen3x8", "gen3x16", "gen3x32"):
+        lm = LatencyModel()
+        lm.pcie_lanes = lanes
+        vals = [lm.e2e(PLATFORMS["Baseline-CPU"], wl)
+                / lm.e2e(PLATFORMS["DSCS-Serverless"], wl)
+                for wl in WORKLOADS.values()]
+        v = float(np.mean(vals))
+        base = base or v
+        rows.append((f"fig15/speedup_{lanes}", v / base,
+                     "paper: lane count ~no effect (latency-bound)"))
+    return rows
+
+
+def fig16_tail_latency() -> List[Row]:
+    rows = []
+    for q, label in ((0.5, "p50"), (0.95, "p95"), (0.99, "p99")):
+        rows.append((f"fig16/speedup_{label}",
+                     _mean_speedup("DSCS-Serverless", q=q),
+                     "paper: 3.1 @p50, 5.0 @p99"))
+    return rows
+
+
+def fig17_cold_start() -> List[Row]:
+    warm = _mean_speedup("DSCS-Serverless")
+    cold = _mean_speedup("DSCS-Serverless", cold=True)
+    return [("fig17/speedup_warm", warm, "paper 3.6"),
+            ("fig17/speedup_cold", cold, "paper 2.6"),
+            ("fig17/cold_lt_warm", float(cold < warm), "must hold")]
+
+
+ALL_FIGURES = [
+    fig04_breakdown, fig05_tail_cdf, fig07_dse_pareto, fig08_speedup,
+    fig09_runtime_breakdown, fig10_energy, fig11_cost_efficiency,
+    fig12_throughput, fig13_batch_sensitivity, fig14_num_functions,
+    fig15_pcie_sensitivity, fig16_tail_latency, fig17_cold_start,
+]

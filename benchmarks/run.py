@@ -1,0 +1,95 @@
+"""Benchmark harness: one function per paper table/figure, plus kernel
+micro-benchmarks and the roofline summary.  Prints ``name,us_per_call,
+derived`` CSV (for analytic figures the middle column is the metric value).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def _kernel_micro():
+    """Pallas kernels (interpret mode on CPU): wall-time per call + checksum
+    against the ref oracle."""
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ops, ref
+
+    rows = []
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (256, 256), jnp.float32)
+    w = jax.random.normal(key, (256, 256), jnp.float32)
+
+    def timed(name, fn, reference):
+        out = fn()                       # compile+warm
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(out)
+        us = (time.perf_counter() - t0) * 1e6
+        err = float(jnp.max(jnp.abs(
+            (out[0] if isinstance(out, (tuple, list)) else out).astype(jnp.float32)
+            - (reference[0] if isinstance(reference, (tuple, list)) else reference)
+            .astype(jnp.float32))))
+        rows.append((f"kernel/{name}", us, f"max_err={err:.2e}"))
+
+    timed("systolic_matmul_256", lambda: ops.matmul(x, w),
+          ref.matmul_ref(x, w))
+    q = jax.random.normal(key, (1, 4, 128, 64), jnp.float32)
+    k = jax.random.normal(key, (1, 2, 128, 64), jnp.float32)
+    v = jax.random.normal(key, (1, 2, 128, 64), jnp.float32)
+    timed("flash_attention_128", lambda: ops.attention(q, k, v, bq=64, bk=64),
+          ref.attention_ref(q, k, v))
+    s = jax.random.normal(key, (256,))
+    b = jax.random.normal(key, (256,))
+    timed("vector_engine_affine", lambda: ops.affine_act(x, s, b, act="gelu"),
+          ref.affine_act_ref(x, s, b, act="gelu"))
+    xr = jax.random.normal(key, (2, 64, 128)) * 0.1
+    la = jax.random.normal(key, (128,))
+    h0 = jnp.zeros((2, 128))
+    timed("rglru_scan", lambda: ops.rglru(xr, xr, xr, la, h0),
+          ref.rglru_ref(xr, xr, xr, la, h0))
+    xs = jax.random.normal(key, (1, 128, 2, 16)) * 0.3
+    dt = jax.nn.softplus(jax.random.normal(key, (1, 128, 2)))
+    A = -jnp.exp(jax.random.normal(key, (2,)) * 0.3)
+    Bm = jax.random.normal(key, (1, 128, 1, 8)) * 0.3
+    timed("ssd_scan", lambda: ops.ssd(xs, dt, A, Bm, Bm, chunk=32),
+          ref.ssd_ref(xs, dt, A, Bm, Bm, chunk=32))
+    return rows
+
+
+def _roofline_summary():
+    """Condense the dry-run JSONs into headline roofline rows."""
+    import glob
+    import json
+    rows = []
+    files = sorted(glob.glob("results/dryrun/*__single__train.json"))
+    for f in files:
+        r = json.load(open(f))
+        if r.get("status") != "ok":
+            continue
+        t = r["roofline"]
+        bound = max(t["compute_s"], t["memory_s"], t["collective_s"])
+        rows.append((f"roofline/{r['arch']}/{r['shape']}", bound,
+                     f"dom={t['dominant']} frac={t['roofline_fraction']:.3f}"))
+    return rows
+
+
+def main() -> None:
+    from benchmarks.figures import ALL_FIGURES
+    print("name,us_per_call,derived")
+    for fig in ALL_FIGURES:
+        t0 = time.perf_counter()
+        rows = fig()
+        dt = (time.perf_counter() - t0) * 1e6
+        for name, val, derived in rows:
+            print(f"{name},{val:.6g},{derived}")
+        print(f"{fig.__name__}/wall,{dt:.1f},us")
+        sys.stdout.flush()
+    for name, us, derived in _kernel_micro():
+        print(f"{name},{us:.1f},{derived}")
+    for name, val, derived in _roofline_summary():
+        print(f"{name},{val:.6g},{derived}")
+
+
+if __name__ == "__main__":
+    main()

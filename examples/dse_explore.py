@@ -1,0 +1,37 @@
+"""Reproduce the paper's Fig. 7 design-space exploration.
+
+    PYTHONPATH=src python examples/dse_explore.py
+
+Sweeps PE array / scratchpad / memory-technology configurations, extracts
+the power<->throughput Pareto frontier under the CSD power cap, and prints
+both the paper's (square-array) winner and the beyond-paper rectangular
+optimum.
+"""
+from repro.core.dsa import DSAConfig
+from repro.core.dse import (DSA_POWER_CAP_W, evaluate, optimal_design,
+                            optimal_square_design, pareto, sweep)
+
+
+def main():
+    pts = sweep()
+    feas = [p for p in pts if p.feasible]
+    print(f"swept {len(pts)} configurations, {len(feas)} feasible "
+          f"under the {DSA_POWER_CAP_W:.0f} W DSA budget")
+    front = pareto(feas, "power_w")
+    print("\npower <-> throughput Pareto frontier:")
+    for p in front:
+        print(f"  {p.cfg.name:24s} {p.throughput_fps:7.1f} fps  "
+              f"{p.power_w:6.2f} W  {p.area_mm2:6.1f} mm^2")
+    sq = optimal_square_design(pts)
+    best = optimal_design(pts)
+    paper = evaluate(DSAConfig())
+    print(f"\nsquare-array winner (paper's search space): {sq.cfg.name} "
+          f"@ {sq.power_w:.2f} W")
+    print(f"paper's point 128x128/4MB/DDR5: {paper.throughput_fps:.1f} fps "
+          f"@ {paper.power_w:.2f} W (paper says 4.2 W)")
+    print(f"beyond-paper rectangular winner: {best.cfg.name} "
+          f"({best.throughput_fps:.1f} fps @ {best.power_w:.2f} W)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""Parse collective traffic out of a compiled (SPMD-partitioned) HLO module.
+
+``cost_analysis()`` does not report collective bytes, so we regex the
+module text for ``all-reduce | all-gather | reduce-scatter | all-to-all |
+collective-permute`` result shapes and convert to estimated per-device link
+traffic:
+
+  all-gather        : result bytes              (each device receives ~result)
+  all-reduce        : 2 x result bytes          (ring: reduce-scatter + all-gather)
+  reduce-scatter    : result bytes x group size (input flows through the ring)
+  all-to-all        : result bytes
+  collective-permute: result bytes
+
+Known limitation (documented in DESIGN.md): ops inside a ``while`` body
+appear once in the text; the dry-run corrects for scan trip counts with its
+L0/L1 variant protocol.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+# result of a collective:  %x = bf16[8,16]{1,0} all-gather(...)
+_COLL_RE = re.compile(
+    r"=\s+((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\]\S*))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per-op-kind {count, result_bytes, traffic_bytes} from module text."""
+    out: Dict[str, Dict[str, float]] = defaultdict(
+        lambda: {"count": 0, "result_bytes": 0.0, "traffic_bytes": 0.0})
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        type_str, kind = m.group(1), m.group(2)
+        # -done ops re-state the result of -start; count each op once
+        if "-done(" in line:
+            continue
+        rb = _shape_bytes(type_str)
+        gs = _group_size(line)
+        if kind == "all-reduce":
+            traffic = 2.0 * rb * (gs - 1) / max(gs, 1)
+        elif kind == "all-gather":
+            traffic = rb * (gs - 1) / max(gs, 1)
+        elif kind == "reduce-scatter":
+            traffic = rb * (gs - 1)
+        else:
+            traffic = rb
+        d = out[kind]
+        d["count"] += 1
+        d["result_bytes"] += rb
+        d["traffic_bytes"] += traffic
+    return dict(out)
+
+
+def total_collective_bytes(hlo_text: str) -> float:
+    return sum(v["traffic_bytes"] for v in collective_stats(hlo_text).values())

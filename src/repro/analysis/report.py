@@ -1,0 +1,104 @@
+"""Assemble the EXPERIMENTS.md roofline tables from dry-run JSONs.
+
+Usage: PYTHONPATH=src python -m repro.analysis.report [results/dryrun]
+Prints markdown to stdout.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import sys
+from collections import defaultdict
+
+
+def load(dirname: str):
+    recs = []
+    for f in sorted(glob.glob(f"{dirname}/*.json")):
+        recs.append(json.load(open(f)))
+    return recs
+
+
+def fmt_bytes(b):
+    return f"{b / (1 << 30):.2f}"
+
+
+def roofline_table(recs, mesh="single", rules="train"):
+    rows = []
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant "
+           "| peak GB/chip | MODEL_FLOPS | useful ratio | roofline frac | "
+           "what would move the dominant term |")
+    sep = "|" + "---|" * 11
+    rows.append(hdr)
+    rows.append(sep)
+    hints = {
+        ("collective", "train"): "bf16 cotangent collectives + reduce-scatter "
+                                 "instead of all-reduce (sequence parallelism)",
+        ("collective", "decode"): "stop FSDP-gathering weights per step: "
+                                  "TP-resident (2D) weight layout",
+        ("collective", "prefill"): "sequence-parallel norm/residual to halve "
+                                   "activation all-reduces",
+        ("memory", "train"): "fuse attention score/softmax chain (flash "
+                             "kernel) to cut HBM round-trips",
+        ("memory", "decode"): "decode is weight/cache-stream bound: int8 "
+                              "weights + grouped KV layout",
+        ("memory", "prefill"): "flash-attention fusion; avoid fp32 "
+                               "score materialization",
+        ("compute", "train"): "reduce remat recompute (checkpoint policy: "
+                              "save attn outputs)",
+        ("compute", "decode"): "batch decode steps (speculative/multi-token)",
+        ("compute", "prefill"): "already near compute roofline; improve MXU "
+                                "utilization via tile shapes",
+    }
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        if r["mesh"] != mesh or r.get("rules", "train") != rules:
+            continue
+        if r["status"] == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | skipped "
+                        f"| — | — | — | — | {r['reason']} |")
+            continue
+        t = r["roofline"]
+        kind = ("train" if r["shape"].startswith("train") else
+                "prefill" if r["shape"].startswith("prefill") else "decode")
+        hint = hints.get((t["dominant"], kind), "")
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.4g} | "
+            f"{t['memory_s']:.4g} | {t['collective_s']:.4g} | "
+            f"**{t['dominant']}** | {fmt_bytes(r['memory']['peak_bytes'])} | "
+            f"{t['model_flops_total']:.3g} | {t['useful_ratio']:.2f} | "
+            f"{t['roofline_fraction']:.3f} | {hint} |")
+    return "\n".join(rows)
+
+
+def dryrun_table(recs):
+    rows = ["| arch | shape | mesh | status | peak GB/chip | args GB | "
+            "temp GB | FLOPs/chip | bytes/chip | coll GB/chip | collectives |",
+            "|" + "---|" * 11]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        if r["status"] == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        f"skipped | — | — | — | — | — | — | {r['reason']} |")
+            continue
+        m = r["memory"]
+        t = r["roofline"]
+        kinds = ", ".join(f"{k}:{int(v['count'])}"
+                          for k, v in r["raw"]["real"]["coll_detail"].items())
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+            f"{fmt_bytes(m['peak_bytes'])} | {fmt_bytes(m['argument_bytes'])} | "
+            f"{fmt_bytes(m['temp_bytes'])} | {t['flops_per_chip']:.3g} | "
+            f"{t['bytes_per_chip']:.3g} | "
+            f"{t['coll_bytes_per_chip'] / (1 << 30):.2f} | {kinds} |")
+    return "\n".join(rows)
+
+
+def main():
+    d = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
+    recs = load(d)
+    print("### Roofline (single-pod 16x16, baseline rules)\n")
+    print(roofline_table(recs, "single"))
+    print("\n### Dry-run artifact summary (both meshes)\n")
+    print(dryrun_table(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,116 @@
+"""Roofline terms from dry-run artifacts.
+
+Hardware constants (TPU v5e-like target):
+  peak bf16 compute : 197 TFLOP/s per chip
+  HBM bandwidth     : 819 GB/s per chip
+  ICI link bandwidth: ~50 GB/s per link
+
+Terms (seconds, per chip):
+  compute    = HLO_FLOPs_per_chip / peak
+  memory     = HLO_bytes_per_chip / HBM_bw
+  collective = collective_traffic_per_chip / link_bw
+
+MODEL_FLOPS (the "useful work" yardstick):
+  train    : 6 * N_active * tokens
+  prefill  : 2 * N_active * tokens
+  decode   : 2 * N_active * batch       (one token per sequence)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, asdict
+from typing import Dict, Optional
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def active_params(cfg: ModelConfig) -> int:
+    """Parameter count with MoE experts discounted by k/E."""
+    from repro.models.transformer import param_defs, PDef
+    import numpy as np
+    import jax
+
+    total = 0
+    def walk(tree, in_expert=False):
+        nonlocal total
+        if isinstance(tree, PDef):
+            n = int(np.prod(tree.shape))
+            if "expert" in (tree.axes or ()):
+                n = n * max(cfg.experts_per_token, 1) // max(cfg.num_experts, 1)
+            total += n
+            return
+        if isinstance(tree, dict):
+            for v in tree.values():
+                walk(v)
+        elif isinstance(tree, (list, tuple)):
+            for v in tree:
+                walk(v)
+    walk(param_defs(cfg))
+    return total
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    n = active_params(cfg)
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch
+
+
+@dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_chip: float
+    bytes_per_chip: float
+    coll_bytes_per_chip: float
+    model_flops_total: float
+    peak_memory_bytes: Optional[float] = None
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_chip / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_chip / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes_per_chip / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPS — catches remat/redundancy waste."""
+        hlo_total = self.flops_per_chip * self.chips
+        return self.model_flops_total / hlo_total if hlo_total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Achievable MFU proxy: useful-compute time / bound time."""
+        useful_s = self.model_flops_total / self.chips / PEAK_FLOPS
+        return useful_s / self.bound_s if self.bound_s else 0.0
+
+    def to_dict(self) -> Dict:
+        d = asdict(self)
+        d.update(compute_s=self.compute_s, memory_s=self.memory_s,
+                 collective_s=self.collective_s, dominant=self.dominant,
+                 useful_ratio=self.useful_ratio,
+                 roofline_fraction=self.roofline_fraction)
+        return d

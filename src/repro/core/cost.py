@@ -1,0 +1,53 @@
+"""Cost-efficiency model (§VI-A):
+
+    CostEfficiency = Throughput x T / (CAPEX + OPEX)
+    OPEX = sum(Power x T x Electricity)
+
+CAPEX per platform from vendor list prices; the DSA's CAPEX follows the
+ASIC-Clouds amortization (NRE spread over volume + silicon cost per mm^2 +
+drive electronics).  T = 3 years, electricity $0.0733/kWh.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.core.dsa import DSAConfig, dsa_area_mm2
+from repro.core.energy import pipeline_energy_j
+from repro.core.latency import LatencyModel
+from repro.core.platforms import Platform, PLATFORMS
+from repro.core.workloads import Workload
+
+ELECTRICITY_USD_PER_KWH = 0.0733
+T_YEARS = 3.0
+T_SECONDS = T_YEARS * 365.25 * 24 * 3600
+HOST_SHARE_USD = 7500.0          # shared node/server infrastructure
+
+# ASIC-Clouds-style: NRE / volume + wafer cost per mm^2 at 14 nm
+NRE_USD = 8e6
+VOLUME = 1e5
+SILICON_USD_PER_MM2 = 0.10
+DRIVE_USD = 320.0                # the SSD itself
+
+
+def dsa_capex_usd(cfg: DSAConfig = DSAConfig()) -> float:
+    return (NRE_USD / VOLUME + dsa_area_mm2(cfg) * SILICON_USD_PER_MM2
+            + DRIVE_USD + 120.0)  # + board/controller
+
+
+def cost_efficiency(lm: LatencyModel, plat: Platform, wl: Workload, *,
+                    batch: int = 1, dsa_cfg=None) -> float:
+    """Requests per dollar over the 3-year window."""
+    lat = lm.e2e(plat, wl, batch=batch, dsa_cfg=dsa_cfg)
+    thr = batch / lat                                   # req/s (run-to-completion)
+    energy = pipeline_energy_j(lm, plat, wl, batch=batch, dsa_cfg=dsa_cfg)
+    avg_power = energy["total"] / lat
+    capex = (dsa_capex_usd(dsa_cfg or DSAConfig())
+             if plat.kind == "dsa" else plat.price_usd) + HOST_SHARE_USD
+    opex = avg_power * T_SECONDS / 3600.0 / 1000.0 * ELECTRICITY_USD_PER_KWH
+    return thr * T_SECONDS / (capex + opex)
+
+
+def cost_efficiency_vs_baseline(lm: LatencyModel, wl: Workload,
+                                plat_name: str, **kw) -> float:
+    return (cost_efficiency(lm, PLATFORMS[plat_name], wl, **kw)
+            / cost_efficiency(lm, PLATFORMS["Baseline-CPU"], wl, **kw))

@@ -1,0 +1,48 @@
+"""System energy model (§VI-A Power measurements).
+
+E = sum over phases of (component power x phase time):
+  * compute device at TDP-scaled utilization while computing, idle otherwise
+  * host/server CPU during system-stack, network and I/O phases
+  * PCIe at per-bit transfer energy (Zeppelin-style ~5 pJ/bit effective)
+Network (Ethernet/Internet) power is omitted, as in the paper.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+from repro.core.latency import LatencyModel
+from repro.core.platforms import Platform, PLATFORMS
+from repro.core.workloads import Workload
+
+HOST_CPU_ACTIVE_W = 120.0      # storage/compute node host during stack+net
+HOST_CPU_LIGHT_W = 45.0        # host while the DSA/NS device computes
+PCIE_PJ_PER_BIT = 5.0
+
+
+def pipeline_energy_j(lm: LatencyModel, plat: Platform, wl: Workload, *,
+                      batch: int = 1, q=0.5, dsa_cfg=None,
+                      extra_accel_funcs: int = 0) -> Dict[str, float]:
+    bd = lm.pipeline_breakdown(plat, wl, batch=batch, q=q, dsa_cfg=dsa_cfg,
+                               extra_accel_funcs=extra_accel_funcs)
+    util = 0.85 if plat.kind in ("dsa", "fpga") else 0.75
+    e: Dict[str, float] = {}
+    e["compute"] = bd["compute"] * (plat.idle_w +
+                                    (plat.tdp_w - plat.idle_w) * util)
+    # host CPU burns cycles on stack / network / driver phases
+    e["host"] = (bd["stack"] + bd["net"]) * HOST_CPU_ACTIVE_W \
+        + (bd["driver"] + bd["io"]) * HOST_CPU_LIGHT_W \
+        + (bd["compute"] * (HOST_CPU_LIGHT_W
+                            if plat.location == "near_storage" else
+                            HOST_CPU_ACTIVE_W))
+    moved_bytes = (wl.request_bytes + wl.input_bytes + wl.output_bytes) * batch
+    e["pcie"] = moved_bytes * 8 * PCIE_PJ_PER_BIT * 1e-12 * 2
+    e["total"] = sum(v for k, v in e.items() if k != "total")
+    return e
+
+
+def energy_reduction_vs_baseline(lm: LatencyModel, wl: Workload,
+                                 plat_name: str, **kw) -> float:
+    base = pipeline_energy_j(lm, PLATFORMS["Baseline-CPU"], wl, **kw)["total"]
+    tgt = pipeline_energy_j(lm, PLATFORMS[plat_name], wl, **kw)["total"]
+    return base / tgt

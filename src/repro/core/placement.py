@@ -1,0 +1,62 @@
+"""Data placement & storage classes (§V).
+
+``Acceleratable_Storage`` routes an application's data onto DSCS-capable
+drives at deployment time; payload-size caps (AWS Lambda's 256 KB request
+limit) guarantee a request's payload lands on ONE drive, and independent
+requests spread across drives for scale-out.
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+MAX_PAYLOAD_BYTES = 256 << 10       # AWS Lambda request cap
+
+
+@dataclass
+class Drive:
+    drive_id: int
+    dscs_capable: bool
+    capacity_bytes: int = 4 << 40
+    used_bytes: int = 0
+    objects: Dict[str, int] = field(default_factory=dict)  # key -> size
+
+    def put(self, key: str, size: int) -> None:
+        self.objects[key] = size
+        self.used_bytes += size
+
+    def has(self, key: str) -> bool:
+        return key in self.objects
+
+
+class StoragePool:
+    """A fleet of drives; some are DSCS (DSA-bearing) drives."""
+
+    def __init__(self, n_plain: int, n_dscs: int):
+        self.drives: List[Drive] = (
+            [Drive(i, False) for i in range(n_plain)]
+            + [Drive(n_plain + i, True) for i in range(n_dscs)])
+
+    def dscs_drives(self) -> List[Drive]:
+        return [d for d in self.drives if d.dscs_capable]
+
+    def place(self, key: str, size: int, storage_class: str) -> Drive:
+        """Deterministic spread of independent request payloads across the
+        drives of the right class (requests are independent, §V)."""
+        pool = (self.dscs_drives() if storage_class == "Acceleratable_Storage"
+                else self.drives)
+        if not pool:
+            pool = self.drives
+        h = int(hashlib.sha1(key.encode()).hexdigest(), 16)
+        # payload-cap invariant: one request payload -> one drive
+        assert size <= MAX_PAYLOAD_BYTES or storage_class != "request", size
+        drive = pool[h % len(pool)]
+        drive.put(key, size)
+        return drive
+
+    def locate(self, key: str) -> Optional[Drive]:
+        for d in self.drives:
+            if d.has(key):
+                return d
+        return None

@@ -1,0 +1,64 @@
+"""Deterministic, resumable synthetic data pipeline.
+
+Batches are a pure function of (seed, step), so restoring a checkpoint and
+replaying from its step reproduces the exact stream — the property the
+fault-tolerance test asserts.  Host-side numpy generation, device_put with
+the batch sharding (the sharded-host-loading pattern).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Iterator, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+@dataclass
+class TokenStream:
+    cfg: ModelConfig
+    batch: int
+    seq: int
+    seed: int = 0
+    shardings: Optional[Dict[str, Any]] = None
+
+    def batch_at(self, step: int) -> Dict[str, Any]:
+        rng = np.random.default_rng((self.seed << 20) ^ step)
+        # zipf-ish token distribution (more realistic than uniform)
+        ranks = rng.zipf(1.3, size=(self.batch, self.seq + 1))
+        toks = np.minimum(ranks, self.cfg.vocab_size - 1).astype(np.int32)
+        out = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+        if self.cfg.frontend == "audio_frames":
+            out["encoder_frames"] = rng.normal(
+                0, 0.02, (self.batch, self.cfg.encoder_seq, self.cfg.d_model)
+            ).astype(np.float32)
+        if self.cfg.frontend == "vision_patches":
+            out["frontend_embeds"] = rng.normal(
+                0, 0.02, (self.batch, self.cfg.frontend_seq, self.cfg.d_model)
+            ).astype(np.float32)
+        if self.shardings:
+            out = {k: jax.device_put(v, self.shardings.get(k))
+                   for k, v in out.items()}
+        return out
+
+    def iter_from(self, step: int) -> Iterator[Dict[str, Any]]:
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+@dataclass
+class RequestStream:
+    """Poisson request arrivals for the serving driver."""
+    cfg: ModelConfig
+    batch: int
+    prompt_len: int
+    seed: int = 0
+
+    def requests_at(self, step: int) -> Dict[str, Any]:
+        rng = np.random.default_rng((self.seed << 20) ^ step)
+        toks = rng.integers(0, self.cfg.vocab_size,
+                            (self.batch, self.prompt_len)).astype(np.int32)
+        return {"tokens": toks}

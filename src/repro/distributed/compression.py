@@ -1,0 +1,60 @@
+"""Int8 gradient compression with error feedback for the data-parallel
+reduction (the classic 1-bit-Adam/TernGrad family, int8 variant).
+
+At 1000+ node scale the cross-pod DP all-reduce is DCN-bound; quantizing
+gradients to int8 (+ fp32 per-leaf scale) cuts wire bytes 4x vs fp32 /
+2x vs bf16.  Error feedback keeps the quantization *unbiased over time*:
+the residual e_t is added back before the next quantization, so SGD/Adam
+convergence is preserved (measured: `tests/test_compression.py` trains to
+the same loss +-2%).
+
+The compress -> (reduce) -> decompress pipeline is expressed functionally;
+on hardware the int8 payload is what crosses the DCN.  The vector-engine
+Pallas kernel (`kernels.vector_engine.quantize_int8`) is the on-device
+implementation of the same transform.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+def _quantize_leaf(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    absmax = jnp.max(jnp.abs(g))
+    scale = jnp.maximum(absmax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def init_error_state(params: Pytree) -> Pytree:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_grads(grads: Pytree, error: Pytree) -> Tuple[Pytree, Pytree]:
+    """grads + carried error -> (dequantized int8 grads, new error).
+
+    The returned grads are exactly what a receiver of the int8 payload
+    would reconstruct; ``new_error`` is the residual to feed back next step.
+    """
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, scale = _quantize_leaf(g32)
+        deq = q.astype(jnp.float32) * scale
+        return deq, g32 - deq
+
+    out = jax.tree.map(one, grads, error)
+    deq = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    err = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return deq, err
+
+
+def wire_bytes(params: Pytree, dtype_bytes: int = 4) -> Tuple[int, int]:
+    """(uncompressed, compressed) DP-reduction payload sizes in bytes."""
+    import numpy as np
+    n = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    leaves = len(jax.tree.leaves(params))
+    return n * dtype_bytes, n * 1 + leaves * 4

@@ -1,0 +1,169 @@
+"""Expert-parallel MoE via ``shard_map`` — the DSCS dispatch-to-data idea
+applied to experts.
+
+With tokens sharded over the data axes and *replicated* over the model axis,
+each model-shard already holds every token; it simply selects the tokens
+routed to its local experts, computes them, and contributes a partial output.
+One ``psum`` over the model axis combines per-token expert outputs.  Per
+layer that is a single activation-sized all-reduce — the same traffic as a
+Megatron row-parallel FFN — instead of the token-table gathers/scatters that
+sharding propagation produces for a gather-based MoE (measured: ~600x less
+collective traffic on qwen3-moe-235b train_4k).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models.layers import act_fn
+
+
+def moe_ffn_ep(x: jax.Array, gate_w: jax.Array, w1: jax.Array, w3: jax.Array,
+               w2: jax.Array, *, num_experts: int, k: int,
+               capacity_factor: float, act: str, mesh: Mesh,
+               batch_axes: Tuple[str, ...], ep_axis: str = "model"
+               ) -> Tuple[jax.Array, jax.Array]:
+    """x (B, S, D) -> (B, S, D), aux loss.  Experts sharded over ``ep_axis``."""
+    E = num_experts
+    ep = mesh.shape[ep_axis]
+    assert E % ep == 0, (E, ep)
+    E_loc = E // ep
+
+    def body(xb, wgb, w1b, w3b, w2b):
+        Bl, S, D = xb.shape
+        T = Bl * S
+        xf = xb.reshape(T, D)
+        logits = jnp.einsum("td,de->te", xf, wgb.astype(xf.dtype)
+                            ).astype(jnp.float32)
+        probs = jax.nn.softmax(logits, axis=-1)
+        topv, topi = lax.top_k(probs, k)                      # (T, k)
+        topv = topv / jnp.clip(topv.sum(-1, keepdims=True), 1e-9)
+        flat_e = topi.reshape(-1)                             # (T*k,)
+        C = max(8, int(math.ceil(T * k * capacity_factor / E)))
+        oh = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)
+        pos_in_e = jnp.sum((jnp.cumsum(oh, axis=0) - 1) * oh, axis=-1)
+        sid = lax.axis_index(ep_axis)
+        own = (flat_e // E_loc) == sid
+        keep = own & (pos_in_e < C)
+        slot = jnp.where(keep, (flat_e % E_loc) * C + pos_in_e, E_loc * C)
+        tok = jnp.repeat(jnp.arange(T), k)
+        buf = jnp.zeros((E_loc * C + 1, D), xf.dtype).at[slot].set(xf[tok])
+        xe = buf[: E_loc * C].reshape(E_loc, C, D)
+        h = act_fn(act)(jnp.einsum("ecd,edf->ecf", xe, w1b))
+        h = h * jnp.einsum("ecd,edf->ecf", xe, w3b)
+        ye = jnp.einsum("ecf,efd->ecd", h, w2b)
+        yflat = jnp.concatenate(
+            [ye.reshape(E_loc * C, D), jnp.zeros((1, D), ye.dtype)], axis=0)
+        wts = jnp.where(keep, topv.reshape(-1), 0.0).astype(yflat.dtype)
+        yk = yflat[slot] * wts[:, None]                       # (T*k, D)
+        out = jnp.sum(yk.reshape(T, k, D), axis=1)
+        out = lax.psum(out, ep_axis)                          # combine shards
+        # Switch-style load-balance aux (identical on every shard: logits
+        # are computed from replicated x)
+        me = probs.mean(axis=0)
+        ce = jnp.bincount(flat_e, length=E).astype(jnp.float32) / (T * k)
+        aux = E * jnp.sum(me * ce)
+        return out.reshape(Bl, S, D), aux
+
+    bspec = P(batch_axes if len(batch_axes) > 1 else
+              (batch_axes[0] if batch_axes else None))
+    fn = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(bspec, P(), P(ep_axis), P(ep_axis), P(ep_axis)),
+        out_specs=(bspec, P()),
+        check_vma=False,
+    )
+    return fn(x, gate_w, w1, w3, w2)
+
+
+def _rank_in_expert(flat_e: jax.Array, num_experts: int) -> jax.Array:
+    """Position of each routing decision within its expert's queue —
+    sort-based (O(Tk log Tk) and O(Tk) memory) instead of the (Tk, E)
+    one-hot cumsum (O(Tk*E) memory)."""
+    n = flat_e.shape[0]
+    perm = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[perm]
+    starts = jnp.searchsorted(sorted_e, jnp.arange(num_experts))
+    pos_sorted = jnp.arange(n) - starts[sorted_e]
+    return jnp.zeros((n,), jnp.int32).at[perm].set(pos_sorted.astype(jnp.int32))
+
+
+def moe_ffn_ep_resident(x: jax.Array, gate_w: jax.Array, w1: jax.Array,
+                        w3: jax.Array, w2: jax.Array, *, num_experts: int,
+                        k: int, capacity_factor: float, act: str, mesh: Mesh,
+                        batch_axes: Tuple[str, ...], ep_axis: str = "model",
+                        fsdp_axis: str = "data") -> Tuple[jax.Array, jax.Array]:
+    """Weight-RESIDENT expert parallelism (§Perf hillclimb, llama4 cell).
+
+    Expert weights are 2D-sharded (experts over ``ep_axis``, hidden F over
+    ``fsdp_axis``) and NEVER move.  Tokens all-gather over the data axis
+    once per layer, each (data, model) device computes its experts' F-slice,
+    partial outputs psum over data (F-combine) and over model (expert-
+    combine) after slicing back to the local token block.  Replaces the
+    per-layer expert-weight all-gathers (~weights/model bytes) with
+    activation-sized collectives: measured ~6x collective reduction on
+    llama4-maverick train_4k.
+    """
+    E = num_experts
+    ep = mesh.shape[ep_axis]
+    dp = mesh.shape[fsdp_axis]
+    assert E % ep == 0
+    E_loc = E // ep
+
+    def body(xb, wgb, w1b, w3b, w2b):
+        Bl, S, D = xb.shape
+        T = Bl * S
+        xf = xb.reshape(T, D)
+        x_all = lax.all_gather(xf, fsdp_axis, axis=0, tiled=True)  # (T_all, D)
+        T_all = T * dp
+        logits = jnp.einsum("td,de->te", x_all,
+                            wgb.astype(x_all.dtype)).astype(jnp.float32)
+        probs = jax.nn.softmax(logits, axis=-1)
+        topv, topi = lax.top_k(probs, k)
+        topv = topv / jnp.clip(topv.sum(-1, keepdims=True), 1e-9)
+        flat_e = topi.reshape(-1)
+        C = max(8, int(math.ceil(T_all * k * capacity_factor / E)))
+        pos_in_e = _rank_in_expert(flat_e, E)
+        sid = lax.axis_index(ep_axis)
+        keep = ((flat_e // E_loc) == sid) & (pos_in_e < C)
+        slot = jnp.where(keep, (flat_e % E_loc) * C + pos_in_e, E_loc * C)
+        tok = jnp.repeat(jnp.arange(T_all), k)
+        buf = jnp.zeros((E_loc * C + 1, D), xf.dtype).at[slot].set(x_all[tok])
+        xe = buf[: E_loc * C].reshape(E_loc, C, D)
+        h = act_fn(act)(jnp.einsum("ecd,edf->ecf", xe, w1b))
+        h = h * jnp.einsum("ecd,edf->ecf", xe, w3b)     # (E_loc, C, F_loc)
+        ye = jnp.einsum("ecf,efd->ecd", h, w2b)         # partial over F
+        ye = lax.psum(ye, fsdp_axis)                    # F-combine (small)
+        yflat = jnp.concatenate(
+            [ye.reshape(E_loc * C, D), jnp.zeros((1, D), ye.dtype)], axis=0)
+        wts = jnp.where(keep, topv.reshape(-1), 0.0)
+        # combine only the local token block, THEN psum over experts
+        did = lax.axis_index(fsdp_axis)
+        myslot = lax.dynamic_slice(slot.reshape(T_all, k),
+                                   (did * T, 0), (T, k))
+        mywts = lax.dynamic_slice(wts.reshape(T_all, k),
+                                  (did * T, 0), (T, k)).astype(yflat.dtype)
+        yk = yflat[myslot.reshape(-1)] * mywts.reshape(-1)[:, None]
+        out = jnp.sum(yk.reshape(T, k, D), axis=1)
+        out = lax.psum(out, ep_axis)                    # expert-combine
+        me = probs.mean(axis=0)
+        ce = jnp.bincount(flat_e, length=E).astype(jnp.float32) / (T_all * k)
+        aux = E * jnp.sum(me * ce)
+        return out.reshape(Bl, S, D), aux
+
+    bspec = P(batch_axes if len(batch_axes) > 1 else
+              (batch_axes[0] if batch_axes else None))
+    fn = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(bspec, P(), P(ep_axis, None, fsdp_axis),
+                  P(ep_axis, None, fsdp_axis), P(ep_axis, fsdp_axis)),
+        out_specs=(bspec, P()),
+        check_vma=False,
+    )
+    return fn(x, gate_w, w1, w3, w2)

@@ -1,0 +1,151 @@
+"""Logical-axis -> mesh-axis sharding rules.
+
+Params carry *logical* axis names (see ``models.transformer.PDef``); this
+module resolves them against a mesh with divisibility filtering so the same
+rules work across all ten architectures (e.g. 40 heads don't divide a 16-way
+model axis -> that dim falls back to replicated, while the flat H*Dh
+projection dim still shards).
+
+Rule sets:
+  TRAIN_RULES : FSDP ("fsdp"->data) + TP ("tp"->model) + EP ("expert"->model)
+  TP_RULES    : pure tensor parallel (no FSDP) — decode-latency friendly
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Pytree = Any
+
+TRAIN_RULES: Dict[str, Tuple[str, ...]] = {
+    "vocab": ("model",),
+    "fsdp": ("data",),
+    "tp": ("model",),
+    "expert": ("model",),
+    "layer": (),
+    "batch": ("pod", "data"),
+    "cache_batch": ("pod", "data"),
+    "cache_seq": ("model",),
+    "heads": ("model",),
+    "act_seq": (),            # sequence-parallel residual stream (off)
+}
+
+TP_RULES: Dict[str, Tuple[str, ...]] = dict(TRAIN_RULES, fsdp=())
+
+# Sequence parallelism: residual-stream activations sharded over model along
+# the sequence dim at block boundaries -> saved scan carries shrink 16x and
+# TP all-reduces become reduce-scatter + all-gather pairs.
+SEQPAR_RULES: Dict[str, Tuple[str, ...]] = dict(TRAIN_RULES,
+                                                act_seq=("model",))
+
+# Decode: weights 2D-RESIDENT (in-dim over data, out-dim over model) so no
+# per-token FSDP weight gathers; the contraction over the data-sharded
+# in-dim becomes a tiny (B,1,*) activation psum.  The KV cache keeps its
+# ("pod","data") batch x "model" sequence sharding; activations reshard
+# between the (batch-parallel) attention and (weight-parallel) FFN — a few
+# hundred KB per layer at decode.
+DECODE_RULES: Dict[str, Tuple[str, ...]] = dict(
+    TRAIN_RULES, batch=("pod",), cache_batch=("pod", "data"),
+    act_hidden=("data",),
+)
+
+
+def _fit_axes(dim: int, names: Sequence[str], mesh: Mesh) -> Tuple[str, ...]:
+    """Longest prefix of mesh axes whose size product divides ``dim``."""
+    out = []
+    prod = 1
+    for n in names:
+        if n not in mesh.shape:
+            continue
+        sz = mesh.shape[n]
+        if dim % (prod * sz) != 0:
+            break
+        out.append(n)
+        prod *= sz
+    return tuple(out)
+
+
+def spec_for(shape: Tuple[int, ...], axes: Tuple[Optional[str], ...],
+             rules: Dict[str, Tuple[str, ...]], mesh: Mesh) -> P:
+    used: set = set()
+    parts = []
+    for dim, ax in zip(shape, axes):
+        if ax is None or ax not in rules:
+            parts.append(None)
+            continue
+        cand = tuple(a for a in rules[ax] if a not in used)
+        fit = _fit_axes(dim, cand, mesh)
+        used.update(fit)
+        if len(fit) == 0:
+            parts.append(None)
+        elif len(fit) == 1:
+            parts.append(fit[0])
+        else:
+            parts.append(fit)
+    # trim trailing Nones for tidiness
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def param_spec_tree(shape_tree: Pytree, axes_tree: Pytree,
+                    rules: Dict[str, Tuple[str, ...]], mesh: Mesh) -> Pytree:
+    # axes_tree leaves are tuples of logical names; shape_tree leaves have .shape
+    flat_s, tdef = jax.tree.flatten(shape_tree, is_leaf=lambda x: hasattr(x, "shape"))
+    flat_a = jax.tree.leaves(
+        axes_tree, is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+    assert len(flat_s) == len(flat_a), (len(flat_s), len(flat_a))
+    specs = [spec_for(s.shape, a, rules, mesh) for s, a in zip(flat_s, flat_a)]
+    return tdef.unflatten(specs)
+
+
+def batch_spec(shape: Tuple[int, ...], rules, mesh) -> P:
+    """(B, ...) arrays: shard the leading batch dim."""
+    fit = _fit_axes(shape[0], [a for a in rules.get("batch", ()) if a in mesh.shape],
+                    mesh)
+    if not fit:
+        return P()
+    return P(fit if len(fit) > 1 else fit[0])
+
+
+def make_act_sharder(mesh: Mesh, rules) -> Callable[[jax.Array, str], jax.Array]:
+    """Activation-constraint callback handed to the model code."""
+    def shard(x: jax.Array, kind: str) -> jax.Array:
+        if mesh.size == 1:
+            return x
+        parts: list = [None] * x.ndim
+        used: set = set()
+        bfit = _fit_axes(x.shape[0], [a for a in rules.get("batch", ())
+                                      if a in mesh.shape], mesh)
+        if bfit:
+            parts[0] = bfit if len(bfit) > 1 else bfit[0]
+            used.update(bfit)
+        if kind == "act" and x.ndim == 3 and rules.get("act_seq"):
+            # sequence parallelism at block boundaries
+            sfit = _fit_axes(x.shape[1], tuple(a for a in rules["act_seq"]
+                                               if a not in used), mesh)
+            if sfit:
+                parts[1] = sfit if len(sfit) > 1 else sfit[0]
+                used.update(sfit)
+        if kind == "act" and x.ndim == 3 and rules.get("act_hidden"):
+            # hidden-dim-sharded residual stream (decode: weights stay
+            # resident, contractions psum activation partials instead)
+            hfit = _fit_axes(x.shape[-1], tuple(a for a in rules["act_hidden"]
+                                                if a not in used), mesh)
+            if hfit:
+                parts[-1] = hfit if len(hfit) > 1 else hfit[0]
+                used.update(hfit)
+        if kind == "logits":
+            vfit = _fit_axes(x.shape[-1], tuple(a for a in rules.get("vocab", ())
+                                                if a not in used), mesh)
+            if vfit:
+                parts[-1] = vfit if len(vfit) > 1 else vfit[0]
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*parts)))
+
+    shard.mesh = mesh      # model code (MoE EP path) reads these
+    shard.rules = rules
+    return shard

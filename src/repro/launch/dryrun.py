@@ -1,0 +1,231 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. lowers+compiles the right step function (train / prefill / decode) from
+     ShapeDtypeStructs — params via shape trees, no allocation,
+  3. prints ``compiled.memory_analysis()`` (fits-in-HBM proof) and
+     ``compiled.cost_analysis()`` (FLOPs/bytes for the roofline),
+  4. applies the L0/L1 scan-correction protocol: XLA's cost analysis counts a
+     ``while`` body once, so we compile variants with 0 and 1 scanned layer
+     groups (MoE token-block scan disabled, exact attention via unrolled
+     chunks) and extrapolate  total = V0 + G*(V1 - V0)  (+ encoder variant
+     for enc-dec archs),
+  5. parses collective traffic from the partitioned HLO text,
+  6. writes one resumable JSON per cell under --out.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k --mesh multi
+  python -m repro.launch.dryrun --all [--mesh both] [--out results/dryrun]
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.analysis import hlo as HLO
+from repro.analysis import roofline as RL
+from repro.configs import ARCHS, SHAPES_BY_NAME, TrainConfig, cells, get_arch
+from repro.distributed import sharding as SHD
+from repro.launch import steps as ST
+from repro.launch.mesh import make_production_mesh
+
+
+def _variant(cfg, groups: int, enc_layers=None):
+    period = len(cfg.block_pattern)
+    rem = cfg.num_layers % period
+    upd = dict(
+        num_layers=groups * period + rem,
+        moe_block_tokens=0,          # exact MoE flops (no inner scan)
+        scan_layers=True,
+    )
+    if cfg.encoder_layers:
+        upd["encoder_layers"] = 0 if enc_layers is None else enc_layers
+    return dataclasses.replace(cfg, **upd)
+
+
+def _lower_compile(cfg, shape, mesh, rules, *, want_memory: bool):
+    """Lower+compile one variant; return metrics dict."""
+    kind = shape.kind
+    sh = ST.shardings_for(cfg, mesh, shape, rules, with_opt=(kind == "train"))
+    tcfg = TrainConfig()
+    t0 = time.time()
+    if kind == "train":
+        fn = ST.make_train_step(cfg, mesh, tcfg, rules)
+        args = (sh["param_shapes"], sh["opt_shapes"], sh["batch_shapes"])
+        in_sh = (sh["params"], sh["opt"], sh["batch"])
+        jfn = jax.jit(fn, in_shardings=in_sh, donate_argnums=(0, 1))
+    elif kind == "prefill":
+        fn = ST.make_prefill_step(cfg, mesh, rules)
+        args = (sh["param_shapes"], sh["batch_shapes"])
+        jfn = jax.jit(fn, in_shardings=(sh["params"], sh["batch"]))
+    else:  # decode
+        fn = ST.make_decode_step(cfg, mesh, rules)
+        args = (sh["param_shapes"], sh["cache_shapes"], sh["batch_shapes"])
+        jfn = jax.jit(fn, in_shardings=(sh["params"], sh["cache"], sh["batch"]),
+                      donate_argnums=(1,))
+    with mesh:
+        lowered = jfn.lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    ca = compiled.cost_analysis() or {}
+    txt = compiled.as_text()
+    colls = HLO.collective_stats(txt)
+    rec = {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+        "coll_bytes": sum(v["traffic_bytes"] for v in colls.values()),
+        "coll_detail": colls,
+        "t_lower_s": t_lower,
+        "t_compile_s": t_compile,
+    }
+    if want_memory:
+        ma = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "code_bytes": int(ma.generated_code_size_in_bytes),
+        }
+        rec["memory"]["peak_bytes"] = (
+            rec["memory"]["argument_bytes"] + rec["memory"]["temp_bytes"]
+            + rec["memory"]["output_bytes"] - rec["memory"]["alias_bytes"])
+    return rec
+
+
+def _combine(v0, v1, groups, venc=None, enc_layers=0):
+    out = {}
+    for key in ("flops", "bytes", "coll_bytes"):
+        total = v0[key] + groups * (v1[key] - v0[key])
+        if venc is not None:
+            total += enc_layers * (venc[key] - v0[key])
+        out[key] = total
+    return out
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str, out_dir: Path,
+             rules_name: str = "train", force: bool = False,
+             overrides: dict = None, tag_suffix: str = "") -> dict:
+    cfg = get_arch(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES_BY_NAME[shape_name]
+    tag = f"{arch}__{shape_name}__{mesh_name}__{rules_name}{tag_suffix}"
+    out_path = out_dir / f"{tag}.json"
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+
+    rec: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                 "rules": rules_name, "status": "ok"}
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        rec["status"] = "skipped"
+        rec["reason"] = "full attention (quadratic); skipped per assignment rules"
+        out_dir.mkdir(parents=True, exist_ok=True)
+        out_path.write_text(json.dumps(rec, indent=1))
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    rules = {"train": SHD.TRAIN_RULES, "tp": SHD.TP_RULES,
+             "seqpar": SHD.SEQPAR_RULES, "decode2d": SHD.DECODE_RULES}[rules_name]
+    period = len(cfg.block_pattern)
+    groups = cfg.num_layers // period
+
+    try:
+        cfg_run = dataclasses.replace(cfg, attn_chunk=512)
+        t0 = time.time()
+        # memory-analysis variant: q-chunk loop as a scan (sequential buffer
+        # liveness, matches how the TPU kernel would stage VMEM tiles);
+        # FLOP variants below unroll it for exact cost accounting.
+        real = _lower_compile(dataclasses.replace(cfg_run, attn_unroll=False),
+                              shape, mesh, rules, want_memory=True)
+        v0 = _lower_compile(_variant(cfg_run, 0), shape, mesh, rules,
+                            want_memory=False)
+        v1 = _lower_compile(_variant(cfg_run, 1), shape, mesh, rules,
+                            want_memory=False)
+        venc = None
+        if cfg.encoder_layers and shape.kind != "decode":
+            venc = _lower_compile(_variant(cfg_run, 0, enc_layers=1), shape,
+                                  mesh, rules, want_memory=False)
+        corr = _combine(v0, v1, groups, venc, cfg.encoder_layers)
+        chips = mesh.size
+        mf = RL.model_flops(cfg, shape)
+        terms = RL.RooflineTerms(
+            arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+            flops_per_chip=corr["flops"], bytes_per_chip=corr["bytes"],
+            coll_bytes_per_chip=corr["coll_bytes"], model_flops_total=mf,
+            peak_memory_bytes=real["memory"]["peak_bytes"])
+        rec.update(
+            chips=chips, groups=groups, period=period,
+            raw={"real": real, "v0": v0, "v1": v1,
+                 **({"venc": venc} if venc else {})},
+            corrected=corr,
+            memory=real["memory"],
+            roofline=terms.to_dict(),
+            wall_s=time.time() - t0,
+        )
+        print(f"[dryrun] {tag}: dominant={terms.dominant} "
+              f"compute={terms.compute_s:.4f}s memory={terms.memory_s:.4f}s "
+              f"coll={terms.collective_s:.4f}s frac={terms.roofline_fraction:.3f} "
+              f"peakGB={real['memory']['peak_bytes']/1e9:.2f} "
+              f"wall={rec['wall_s']:.0f}s", flush=True)
+        print(f"  memory_analysis: {real['memory']}", flush=True)
+        print(f"  cost_analysis: flops/chip={corr['flops']:.3e} "
+              f"bytes/chip={corr['bytes']:.3e} coll/chip={corr['coll_bytes']:.3e}",
+              flush=True)
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()
+        print(f"[dryrun] {tag}: FAILED {rec['error']}", flush=True)
+
+    out_dir.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps(rec, indent=1, default=float))
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=("single", "multi", "both"))
+    ap.add_argument("--rules", default="train")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    if args.all:
+        todo = [(a.name, s.name) for a, s, _ in cells()]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        todo = [(args.arch, args.shape)]
+
+    n_ok = n_skip = n_err = 0
+    for arch, shape in todo:
+        for mesh_name in meshes:
+            rec = run_cell(arch, shape, mesh_name, out_dir, args.rules,
+                           force=args.force)
+            n_ok += rec["status"] == "ok"
+            n_skip += rec["status"] == "skipped"
+            n_err += rec["status"] == "error"
+    print(f"[dryrun] done: ok={n_ok} skipped={n_skip} errors={n_err}")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run contract).
+
+``input_specs(arch, shape)`` returns weak-type-correct, shardable specs with
+no device allocation — the same pattern the dry-run, the roofline pass and
+the benchmarks consume.  Frontends are STUBS: audio/vision archs receive
+precomputed frame/patch embeddings here.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+Pytree = Any
+
+
+def _frontend_specs(cfg: ModelConfig, batch: int) -> Dict[str, jax.ShapeDtypeStruct]:
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.frontend == "audio_frames":
+        return {"encoder_frames": jax.ShapeDtypeStruct(
+            (batch, cfg.encoder_seq, cfg.d_model), dt)}
+    if cfg.frontend == "vision_patches":
+        return {"frontend_embeds": jax.ShapeDtypeStruct(
+            (batch, cfg.frontend_seq, cfg.d_model), dt)}
+    return {}
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Model inputs for one (arch x shape) cell."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        out = {
+            "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        }
+        out.update(_frontend_specs(cfg, B))
+        return out
+    if shape.kind == "prefill":
+        out = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        out.update(_frontend_specs(cfg, B))
+        return out
+    if shape.kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+    raise ValueError(shape.kind)
+
+
+def make_batch(cfg: ModelConfig, shape: ShapeConfig, key: jax.Array) -> Pytree:
+    """Materialize a random batch matching ``input_specs`` (tests/examples)."""
+    specs = input_specs(cfg, shape)
+    out = {}
+    for name, s in specs.items():
+        key, k = jax.random.split(key)
+        if s.dtype == jnp.int32:
+            out[name] = jax.random.randint(k, s.shape, 0, cfg.vocab_size, jnp.int32)
+        else:
+            out[name] = (jax.random.normal(k, s.shape, jnp.float32) * 0.02).astype(s.dtype)
+    return out

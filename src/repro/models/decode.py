@@ -1,0 +1,469 @@
+"""Serving path: cache construction, prefill, and single-token decode.
+
+Cache layout mirrors the param layout: scanned groups hold stacked leaves
+(G, ...) consumed by ``lax.scan`` during decode; pattern remainders are
+per-layer dicts.  Per-family caches:
+
+  attn   : full K/V (B, S, KV, Dh) written at ``pos``  (decode_32k)
+  attn+sw: ring buffer (B, W, KV, Dh) + slot->position map (W,)  (long_500k)
+  mla    : compressed latent (B, S, r) + shared rope keys (B, S, dr);
+           decode uses the *absorbed* formulation (scores in latent space)
+  rglru  : recurrent state (B, W) fp32 + conv tail (B, K-1, W)
+  ssd    : SSM state (B, H, P, N) fp32 + conv tail
+  cross  : encoder K/V computed once at prefill (whisper)
+
+``pos`` is a shared scalar (all sequences advance in lock-step), which is
+what the dry-run cells specify (a KV cache of exactly seq_len).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+
+Pytree = Any
+
+
+# ---------------------------------------------------------------------------
+# cache shape definitions
+# ---------------------------------------------------------------------------
+
+def _use_ring(cfg: ModelConfig, seq: int) -> bool:
+    return cfg.sliding_window > 0 and seq > cfg.sliding_window
+
+
+def layer_cache_def(cfg: ModelConfig, kind: str, batch: int, seq: int,
+                    decoder: bool = True) -> Dict[str, jax.ShapeDtypeStruct]:
+    dt = jnp.dtype(cfg.dtype)
+    Dh = cfg.resolved_head_dim
+    KV = cfg.num_kv_heads
+    out: Dict[str, jax.ShapeDtypeStruct] = {}
+    if kind == "attn":
+        if cfg.attention == "mla":
+            out["lat"] = jax.ShapeDtypeStruct((batch, seq, cfg.kv_lora_rank), dt)
+            out["kr"] = jax.ShapeDtypeStruct((batch, seq, cfg.rope_head_dim), dt)
+        elif _use_ring(cfg, seq):
+            W = cfg.sliding_window
+            out["k"] = jax.ShapeDtypeStruct((batch, W, KV, Dh), dt)
+            out["v"] = jax.ShapeDtypeStruct((batch, W, KV, Dh), dt)
+            out["kpos"] = jax.ShapeDtypeStruct((W,), jnp.int32)
+        else:
+            out["k"] = jax.ShapeDtypeStruct((batch, seq, KV, Dh), dt)
+            out["v"] = jax.ShapeDtypeStruct((batch, seq, KV, Dh), dt)
+    elif kind == "rglru":
+        W = cfg.d_model
+        out["h"] = jax.ShapeDtypeStruct((batch, W), jnp.float32)
+        out["conv"] = jax.ShapeDtypeStruct((batch, 3, W), dt)
+    elif kind == "ssd":
+        din = cfg.ssm_expand * cfg.d_model
+        H = din // cfg.ssm_head_dim
+        conv_ch = din + 2 * cfg.ssm_ngroups * cfg.ssm_state
+        out["h"] = jax.ShapeDtypeStruct(
+            (batch, H, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32)
+        out["conv"] = jax.ShapeDtypeStruct((batch, cfg.ssm_conv - 1, conv_ch), dt)
+    if decoder and cfg.cross_attention:
+        out["xk"] = jax.ShapeDtypeStruct((batch, cfg.encoder_seq, KV, Dh), dt)
+        out["xv"] = jax.ShapeDtypeStruct((batch, cfg.encoder_seq, KV, Dh), dt)
+    return out
+
+
+def cache_shapes(cfg: ModelConfig, batch: int, seq: int) -> Pytree:
+    """ShapeDtypeStruct cache tree (dry-run: no allocation)."""
+    period = len(cfg.block_pattern)
+    groups, rem = divmod(cfg.num_layers, period)
+    group_tree = {
+        f"b{j}_{kind}": layer_cache_def(cfg, kind, batch, seq)
+        for j, kind in enumerate(cfg.block_pattern)
+    }
+    stacked = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((groups,) + s.shape, s.dtype), group_tree
+    ) if groups else {}
+    return {
+        "blocks": stacked,
+        "rem": [layer_cache_def(cfg, cfg.block_pattern[j % period], batch, seq)
+                for j in range(rem)],
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def layer_cache_axes(cfg: ModelConfig, kind: str, batch: int, seq: int,
+                     decoder: bool = True) -> Dict[str, tuple]:
+    """Logical sharding axes mirroring ``layer_cache_def`` leaf-for-leaf."""
+    out: Dict[str, tuple] = {}
+    if kind == "attn":
+        if cfg.attention == "mla":
+            out["lat"] = ("cache_batch", "cache_seq", None)
+            out["kr"] = ("cache_batch", "cache_seq", None)
+        elif _use_ring(cfg, seq):
+            out["k"] = ("cache_batch", "cache_seq", None, None)  # ring W/model
+            out["v"] = ("cache_batch", "cache_seq", None, None)
+            out["kpos"] = (None,)
+        else:
+            out["k"] = ("cache_batch", "cache_seq", None, None)
+            out["v"] = ("cache_batch", "cache_seq", None, None)
+    elif kind == "rglru":
+        out["h"] = ("cache_batch", None)
+        out["conv"] = ("cache_batch", None, None)
+    elif kind == "ssd":
+        out["h"] = ("cache_batch", "heads", None, None)
+        out["conv"] = ("cache_batch", None, None)
+    if decoder and cfg.cross_attention:
+        out["xk"] = ("cache_batch", "cache_seq", None, None)
+        out["xv"] = ("cache_batch", "cache_seq", None, None)
+    return out
+
+
+def cache_logical_axes(cfg: ModelConfig, batch: int, seq: int) -> Pytree:
+    period = len(cfg.block_pattern)
+    groups, rem = divmod(cfg.num_layers, period)
+    group_tree = {
+        f"b{j}_{kind}": layer_cache_axes(cfg, kind, batch, seq)
+        for j, kind in enumerate(cfg.block_pattern)
+    }
+    is_ax = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+    stacked = jax.tree.map(lambda ax: ("layer",) + ax, group_tree,
+                           is_leaf=is_ax) if groups else {}
+    return {
+        "blocks": stacked,
+        "rem": [layer_cache_axes(cfg, cfg.block_pattern[j % period], batch, seq)
+                for j in range(rem)],
+        "pos": (None,),   # scalar; zip-trimmed to P()
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq: int) -> Pytree:
+    def mk(s: jax.ShapeDtypeStruct):
+        if s.dtype == jnp.int32 and s.shape and len(s.shape) == 1:
+            return jnp.full(s.shape, -1, jnp.int32)    # ring kpos
+        return jnp.zeros(s.shape, s.dtype)
+    tree = jax.tree.map(mk, cache_shapes(cfg, batch, seq))
+    tree["pos"] = jnp.zeros((), jnp.int32)
+    return tree
+
+
+# ---------------------------------------------------------------------------
+# single-token block steps
+# ---------------------------------------------------------------------------
+
+def _ring_attend(q, kc, vc, kpos, pos, window):
+    """q (B,1,H,Dh) vs ring cache (B,W,KV,Dh); kpos (W,) slot->abs position."""
+    B, _, H, Dh = q.shape
+    KV = kc.shape[2]
+    G = H // KV
+    qg = q.reshape(B, 1, KV, G, Dh)
+    s = jnp.einsum("bckgd,bskd->bkgcs", qg, kc).astype(jnp.float32) / math.sqrt(Dh)
+    ok = (kpos >= 0) & (kpos <= pos) & ((pos - kpos) < window)
+    s = jnp.where(ok[None, None, None, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgcs,bskd->bckgd", w.astype(vc.dtype), vc)
+    return o.reshape(B, 1, H, vc.shape[-1])
+
+
+def attn_step(cfg: ModelConfig, p, x, cache, pos, ctx):
+    Dh = cfg.resolved_head_dim
+    H, KV = cfg.num_heads, cfg.num_kv_heads
+    h = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    q = T._heads(T._proj(h, p["wq"], p.get("bq")), H, Dh)
+    k = T._heads(T._proj(h, p["wk"], p.get("bk")), KV, Dh)
+    v = T._heads(T._proj(h, p["wv"], p.get("bv")), KV, Dh)
+    if cfg.qk_norm:
+        q = L.rms_norm(q, p["qn"], cfg.norm_eps)
+        k = L.rms_norm(k, p["kn"], cfg.norm_eps)
+    if cfg.rope in ("rope", "mrope"):
+        q = L.apply_rope(q, ctx.cos, ctx.sin)
+        k = L.apply_rope(k, ctx.cos, ctx.sin)
+    window = cfg.sliding_window if cfg.family == "hybrid" else 0
+    if "kpos" in cache:                       # ring buffer (long-context local)
+        W = cfg.sliding_window
+        slot = pos % W
+        kc = lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+        vc = lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+        kpos = lax.dynamic_update_slice(cache["kpos"], pos[None], (slot,))
+        o = _ring_attend(q, kc, vc, kpos, pos, W)
+        new_cache = dict(cache, k=kc, v=vc, kpos=kpos)
+    else:
+        kc = lax.dynamic_update_slice(cache["k"], k, (0, pos, 0, 0))
+        vc = lax.dynamic_update_slice(cache["v"], v, (0, pos, 0, 0))
+        o = L._attn_block(q, kc, vc, q_start=pos, kv_start=0, causal=True,
+                          window=window, kv_len=pos + 1)
+        new_cache = dict(cache, k=kc, v=vc)
+    x = x + T._proj(o.reshape(x.shape[0], 1, H * Dh), p["wo"])
+    return x, new_cache
+
+
+def mla_step(cfg: ModelConfig, p, x, cache, pos, ctx):
+    """Absorbed MLA decode: scores and context in latent space."""
+    H = cfg.num_heads
+    dn, dr, dv = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    r = cfg.kv_lora_rank
+    B = x.shape[0]
+    h = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    cq = L.rms_norm(T._proj(h, p["wq_a"]), p["q_ln"], cfg.norm_eps)
+    q = T._heads(T._proj(cq, p["wq_b"]), H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = L.apply_rope(q_rope, ctx.cos_r, ctx.sin_r)
+    kv = T._proj(h, p["wkv_a"])
+    lat_t = L.rms_norm(kv[..., :r], p["kv_ln"], cfg.norm_eps)    # (B,1,r)
+    kr_t = L.apply_rope(kv[..., r:][:, :, None, :], ctx.cos_r, ctx.sin_r)[:, :, 0]
+    lat = lax.dynamic_update_slice(cache["lat"], lat_t, (0, pos, 0))
+    kr = lax.dynamic_update_slice(cache["kr"], kr_t, (0, pos, 0))
+    wk = p["wk_b"].reshape(r, H, dn)
+    wv = p["wv_b"].reshape(r, H, dv)
+    # absorb wk into q:  q_lat (B,1,H,r)
+    q_lat = jnp.einsum("bchn,rhn->bchr", q_nope, wk.astype(q_nope.dtype))
+    s = (jnp.einsum("bchr,bsr->bhcs", q_lat, lat)
+         + jnp.einsum("bchp,bsp->bhcs", q_rope, kr)).astype(jnp.float32)
+    s = s / math.sqrt(dn + dr)
+    valid = jnp.arange(lat.shape[1]) <= pos
+    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    ctx_lat = jnp.einsum("bhcs,bsr->bchr", w.astype(lat.dtype), lat)
+    o = jnp.einsum("bchr,rhv->bchv", ctx_lat, wv.astype(ctx_lat.dtype))
+    x = x + T._proj(o.reshape(B, 1, H * dv), p["wo"])
+    return x, dict(cache, lat=lat, kr=kr)
+
+
+def cross_step(cfg: ModelConfig, p, x, cache, ctx):
+    Dh = cfg.resolved_head_dim
+    H = cfg.num_heads
+    h = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    q = T._heads(T._proj(h, p["wq"]), H, Dh)
+    o = L._attn_block(q, cache["xk"], cache["xv"], q_start=0, kv_start=0,
+                      causal=False, window=0, kv_len=None)
+    return x + T._proj(o.reshape(x.shape[0], 1, H * Dh), p["wo"])
+
+
+def rglru_step_block(cfg: ModelConfig, p, x, cache, ctx):
+    h = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    gate = L.act_fn("gelu")(T._proj(h, p["wy"]))[:, 0]
+    xb_t = T._proj(h, p["wx"])[:, 0]                            # (B,W)
+    hist = jnp.concatenate([cache["conv"].astype(x.dtype), xb_t[:, None]], axis=1)
+    w = p["conv_w"]
+    conv = sum(hist[:, i] * w[i][None, :] for i in range(w.shape[0]))
+    ga = conv @ p["wga"].astype(x.dtype) + p["bga"].astype(x.dtype)
+    gx = conv @ p["wgx"].astype(x.dtype) + p["bgx"].astype(x.dtype)
+    hn = L.rglru_step(conv, gx, ga, p["log_a"], cache["h"])
+    y = T._proj((hn.astype(x.dtype) * gate)[:, None], p["wo"])
+    return x + y, dict(cache, h=hn.astype(jnp.float32), conv=hist[:, 1:])
+
+
+def ssd_step_block(cfg: ModelConfig, p, x, cache, ctx):
+    D = cfg.d_model
+    din = cfg.ssm_expand * D
+    G, N = cfg.ssm_ngroups, cfg.ssm_state
+    H = din // cfg.ssm_head_dim
+    P = cfg.ssm_head_dim
+    h = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    zxbcdt = T._proj(h, p["in_proj"])[:, 0]                     # (B, ...)
+    z, xs, BC, dt = jnp.split(zxbcdt, [din, 2 * din, 2 * din + 2 * G * N], axis=-1)
+    conv_in = jnp.concatenate([xs, BC], axis=-1)
+    hist = jnp.concatenate([cache["conv"].astype(x.dtype), conv_in[:, None]], axis=1)
+    w = p["conv_w"]
+    conv = jax.nn.silu(sum(hist[:, i] * w[i][None, :] for i in range(w.shape[0])))
+    xs, Bm, Cm = jnp.split(conv, [din, din + G * N], axis=-1)
+    xt = xs.reshape(-1, H, P)
+    Bt = Bm.reshape(-1, G, N)
+    Ct = Cm.reshape(-1, G, N)
+    dtt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, :])
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+    y, hn = L.ssd_step(xt, dtt, A, Bt, Ct, cache["h"])
+    y = y + xt * p["d_skip"].astype(x.dtype)[None, :, None]
+    y = L.rms_norm(y.reshape(-1, din) * jax.nn.silu(z), p["out_ln"], cfg.norm_eps)
+    out = T._proj(y[:, None], p["out_proj"])
+    return x + out, dict(cache, h=hn, conv=hist[:, 1:])
+
+
+def block_step(cfg: ModelConfig, kind: str, p, x, cache, pos, ctx):
+    if kind == "attn":
+        if cfg.attention == "mla":
+            x, cache = mla_step(cfg, p["attn"], x, cache, pos, ctx)
+        else:
+            x, cache = attn_step(cfg, p["attn"], x, cache, pos, ctx)
+    elif kind == "rglru":
+        x, c2 = rglru_step_block(cfg, p["rec"], x,
+                                 {"h": cache["h"], "conv": cache["conv"]}, ctx)
+        cache = dict(cache, **c2)
+    elif kind == "ssd":
+        x, c2 = ssd_step_block(cfg, p["ssd"], x,
+                               {"h": cache["h"], "conv": cache["conv"]}, ctx)
+        cache = dict(cache, **c2)
+    if "xattn" in p and "xk" in cache:
+        x = cross_step(cfg, p["xattn"], x, cache, ctx)
+    if "ffn" in p:
+        x = T.ffn_forward(cfg, p["ffn"], x, ctx)
+    return ctx.shard(x, "act"), cache
+
+
+# ---------------------------------------------------------------------------
+# decode step (one new token for the whole batch)
+# ---------------------------------------------------------------------------
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, *,
+                shard=lambda x, k: x) -> Tuple[jax.Array, Pytree]:
+    """tokens (B, 1) at position cache['pos'] -> (logits (B,1,V), new cache)."""
+    pos = cache["pos"]
+    B = tokens.shape[0]
+    x = T.embed_tokens(cfg, params, tokens)
+    if cfg.rope == "learned":
+        x = x + params["pos_embed"][pos[None]].astype(x.dtype)[None]
+    x = shard(x, "act")
+
+    positions = jnp.broadcast_to(pos[None, None], (B, 1))
+    if cfg.rope == "mrope":
+        positions = jnp.broadcast_to(positions[..., None], (B, 1, 3))
+    ctx = T.Ctx(cfg=cfg, shard=shard, q_offset=pos, kv_len=pos + 1)
+    if cfg.rope in ("rope", "mrope"):
+        ctx.cos, ctx.sin = T._rope_ctx(cfg, positions, cfg.resolved_head_dim)
+        if cfg.attention == "mla":
+            ctx.cos_r, ctx.sin_r = T._rope_ctx(cfg, positions, cfg.rope_head_dim)
+            ctx.cos = ctx.sin = None
+
+    pattern = cfg.block_pattern
+
+    def group_step(xc, gpc):
+        gp, gc = gpc
+        new_gc = {}
+        for j, kind in enumerate(pattern):
+            key = f"b{j}_{kind}"
+            xc, new_gc[key] = block_step(cfg, kind, gp[key], xc, gc[key], pos, ctx)
+        return xc, new_gc
+
+    new_cache: Dict[str, Any] = {"pos": pos + 1}
+    if cache["blocks"]:
+        x, new_blocks = lax.scan(group_step, x, (params["blocks"], cache["blocks"]))
+        new_cache["blocks"] = new_blocks
+    else:
+        new_cache["blocks"] = {}
+    new_rem = []
+    for j, (lp, lc) in enumerate(zip(params["rem"], cache["rem"])):
+        kind = pattern[j % len(pattern)]
+        x, nc = block_step(cfg, kind, lp, x, lc, pos, ctx)
+        new_rem.append(nc)
+    new_cache["rem"] = new_rem
+
+    logits = T.unembed(cfg, params, x, shard)
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# prefill (build the cache for a whole prompt)
+# ---------------------------------------------------------------------------
+
+def _attn_prefill_kv(cfg, p, h, ctx):
+    Dh = cfg.resolved_head_dim
+    KV = cfg.num_kv_heads
+    k = T._heads(T._proj(h, p["wk"], p.get("bk")), KV, Dh)
+    v = T._heads(T._proj(h, p["wv"], p.get("bv")), KV, Dh)
+    if cfg.qk_norm:
+        k = L.rms_norm(k, p["kn"], cfg.norm_eps)
+    if cfg.rope in ("rope", "mrope"):
+        k = L.apply_rope(k, ctx.cos, ctx.sin)
+    return k, v
+
+
+def block_prefill(cfg: ModelConfig, kind: str, p, x, ctx: T.Ctx):
+    """Forward one block over the full prompt, returning its cache entry."""
+    S = x.shape[1]
+    cache: Dict[str, Any] = {}
+    if kind == "attn":
+        if cfg.attention == "mla":
+            h = L.rms_norm(x, p["attn"]["ln"], cfg.norm_eps)
+            kv = T._proj(h, p["attn"]["wkv_a"])
+            lat = L.rms_norm(kv[..., :cfg.kv_lora_rank], p["attn"]["kv_ln"],
+                             cfg.norm_eps)
+            kr = L.apply_rope(kv[..., cfg.kv_lora_rank:][:, :, None, :],
+                              ctx.cos_r, ctx.sin_r)[:, :, 0]
+            cache["lat"], cache["kr"] = lat, kr
+            x = T.mla_forward(cfg, p["attn"], x, ctx)
+        else:
+            h = L.rms_norm(x, p["attn"]["ln"], cfg.norm_eps)
+            k, v = _attn_prefill_kv(cfg, p["attn"], h, ctx)
+            if _use_ring(cfg, S):
+                W = cfg.sliding_window
+                shift = (S - W) % W          # align slots to p % W
+                cache["k"] = jnp.roll(k[:, S - W:], shift, axis=1)
+                cache["v"] = jnp.roll(v[:, S - W:], shift, axis=1)
+                cache["kpos"] = jnp.roll(jnp.arange(S - W, S, dtype=jnp.int32),
+                                         shift)
+            else:
+                cache["k"], cache["v"] = k, v
+            window = cfg.sliding_window if cfg.family == "hybrid" else 0
+            x = T.attn_forward(cfg, p["attn"], x, ctx, window=window)
+    elif kind == "rglru":
+        x, (hl, conv) = T.rglru_forward(cfg, p["rec"], x, ctx)
+        cache["h"], cache["conv"] = hl.astype(jnp.float32), conv
+    elif kind == "ssd":
+        x, (hl, conv) = T.ssd_forward(cfg, p["ssd"], x, ctx)
+        cache["h"], cache["conv"] = hl, conv
+    if "xattn" in p and ctx.enc_out is not None:
+        xp = p["xattn"]
+        hk = L.rms_norm(ctx.enc_out, xp["ln"], cfg.norm_eps)
+        cache["xk"] = T._heads(T._proj(hk, xp["wk"]), cfg.num_kv_heads,
+                               cfg.resolved_head_dim)
+        cache["xv"] = T._heads(T._proj(hk, xp["wv"]), cfg.num_kv_heads,
+                               cfg.resolved_head_dim)
+        x = T.attn_forward(cfg, xp, x, ctx, kv_override=(cache["xk"], cache["xv"]),
+                           cross=True)
+    if "ffn" in p:
+        x = T.ffn_forward(cfg, p["ffn"], x, ctx)
+    return ctx.shard(x, "act"), cache
+
+
+def prefill(cfg: ModelConfig, params, tokens, *, encoder_frames=None,
+            frontend_embeds=None, shard=lambda x, k: x):
+    """Run the prompt, returning (logits_last (B,1,V), cache)."""
+    B, S = tokens.shape
+    x = T.embed_tokens(cfg, params, tokens)
+    if cfg.frontend == "vision_patches" and frontend_embeds is not None:
+        pe = T._proj(frontend_embeds.astype(x.dtype), params["patch_proj"])
+        x = jnp.concatenate([pe, x[:, pe.shape[1]:]], axis=1)
+    if cfg.rope == "learned":
+        x = x + params["pos_embed"][jnp.arange(S)].astype(x.dtype)
+    x = shard(x, "act")
+
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    if cfg.rope == "mrope":
+        positions = jnp.broadcast_to(positions[..., None], (B, S, 3))
+    ctx = T.Ctx(cfg=cfg, shard=shard)
+    if cfg.rope in ("rope", "mrope"):
+        ctx.cos, ctx.sin = T._rope_ctx(cfg, positions, cfg.resolved_head_dim)
+        if cfg.attention == "mla":
+            ctx.cos_r, ctx.sin_r = T._rope_ctx(cfg, positions, cfg.rope_head_dim)
+            ctx.cos = ctx.sin = None
+    if encoder_frames is not None and (cfg.encoder_layers or cfg.cross_attention):
+        ctx.enc_out = (T.encode(cfg, params, encoder_frames, shard)
+                       if cfg.encoder_layers else encoder_frames.astype(x.dtype))
+
+    pattern = cfg.block_pattern
+
+    def group_fn(xc, gp):
+        caches = {}
+        for j, kind in enumerate(pattern):
+            key = f"b{j}_{kind}"
+            xc, caches[key] = block_prefill(cfg, kind, gp[key], xc, ctx)
+        return xc, caches
+
+    gf = jax.checkpoint(group_fn) if cfg.remat else group_fn
+    cache: Dict[str, Any] = {"pos": jnp.asarray(S, jnp.int32)}
+    if params["blocks"]:
+        x, cache["blocks"] = lax.scan(gf, x, params["blocks"])
+    else:
+        cache["blocks"] = {}
+    cache["rem"] = []
+    for j, lp in enumerate(params["rem"]):
+        kind = pattern[j % len(pattern)]
+        x, c = block_prefill(cfg, kind, lp, x, ctx)
+        cache["rem"].append(c)
+
+    logits = T.unembed(cfg, params, x[:, -1:], shard)
+    return logits, cache

@@ -1,0 +1,404 @@
+"""Building blocks shared by every architecture family.
+
+Everything is functional: params are plain pytrees, ops are pure functions.
+Attention is *blocked* (flash-style chunking over queries) in the pure-JAX
+path so activation memory stays bounded at 32k+ sequence lengths; the Pallas
+kernels in ``repro.kernels`` are the TPU-target versions of the same tiles.
+
+Design notes for the dry-run (CPU, 512 placeholder devices):
+  * The q-chunk loop may be UNROLLED (``unroll=True``) so XLA's
+    ``cost_analysis`` counts attention FLOPs exactly (a ``while`` body is
+    otherwise counted once, not x trip-count).
+  * Linear recurrences (RG-LRU, SSD inter-chunk state) use
+    ``lax.associative_scan`` — log-depth combinator trees, no while loops,
+    so their FLOPs are counted correctly as well.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+# ---------------------------------------------------------------------------
+# norms & activations
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 * lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(dt)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": partial(jax.nn.gelu, approximate=True)}[name]
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings (RoPE and 3-section M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_angles(positions: jax.Array, head_dim: int, theta: float) -> Tuple[jax.Array, jax.Array]:
+    """positions (..., S) -> cos/sin (..., S, head_dim//2), fp32."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def mrope_angles(positions: jax.Array, head_dim: int, theta: float,
+                 sections=(1, 1, 1)) -> Tuple[jax.Array, jax.Array]:
+    """M-RoPE: positions (B, S, 3) (t/h/w ids); frequency bands split into
+    three sections proportionally to ``sections``."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    total = sum(sections)
+    bounds = []
+    acc = 0
+    for s in sections:
+        acc += s
+        bounds.append((half * acc) // total)
+    band = jnp.zeros((half,), dtype=jnp.int32)
+    prev = 0
+    for i, b in enumerate(bounds):
+        band = band.at[prev:b].set(i)
+        prev = b
+    # pick the position channel (t/h/w) for each frequency band
+    pos = jnp.take_along_axis(
+        positions.astype(jnp.float32),                 # (B, S, 3)
+        jnp.broadcast_to(band[None, None, :],
+                         positions.shape[:-1] + (half,)),
+        axis=-1,
+    )                                                  # (B, S, half)
+    ang = pos * freqs[None, None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x (B, S, H, Dh); cos/sin (B, S, Dh//2) -> rotate-half RoPE."""
+    dt = x.dtype
+    half = x.shape[-1] // 2
+    x1 = x[..., :half].astype(jnp.float32)
+    x2 = x[..., half:].astype(jnp.float32)
+    c = cos[:, :, None, :]
+    s = sin[:, :, None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# blocked attention (the pure-JAX analogue of kernels/flash_attention)
+# ---------------------------------------------------------------------------
+
+def _attn_block(qc: jax.Array, k: jax.Array, v: jax.Array, *,
+                q_start, kv_start: int, causal: bool, window: int,
+                kv_len: Optional[jax.Array]) -> jax.Array:
+    """One query block attending to a K/V span.
+
+    qc (B, C, H, Dh); k/v (B, Skv, KV, Dv).  GQA via head grouping.
+    ``q_start`` may be a traced scalar (position offset of qc within the
+    sequence); ``kv_start`` likewise for k.  ``kv_len`` optionally masks the
+    valid KV prefix (decode with preallocated cache).
+    """
+    B, C, H, Dh = qc.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = qc.reshape(B, C, KV, G, Dh)
+    scores = jnp.einsum("bckgd,bskd->bkgcs", qg, k).astype(jnp.float32)
+    scores = scores / math.sqrt(Dh)
+    qpos = q_start + jnp.arange(C)                      # (C,)
+    kpos = kv_start + jnp.arange(Skv)                   # (Skv,)
+    mask = jnp.ones((C, Skv), dtype=bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window:
+        mask &= (qpos[:, None] - kpos[None, :]) < window
+    if kv_len is not None:
+        # scalar (possibly traced) valid-prefix length, shared across batch
+        mask &= kpos[None, :] < kv_len
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgcs,bskd->bckgd", w.astype(v.dtype), v)
+    return out.reshape(B, C, H, v.shape[-1])
+
+
+def blocked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool = True, window: int = 0, chunk: int = 512,
+                      unroll: bool = True, q_offset: int = 0,
+                      kv_len: Optional[jax.Array] = None) -> jax.Array:
+    """Flash-style blocked attention over query chunks.
+
+    q (B, Sq, H, Dh); k/v (B, Skv, KV, Dv).
+
+    unroll=True (default): a *python* loop over query chunks.  Each chunk
+    slices a static K/V span — for causal attention chunk i only reads
+    K[: (i+1)*chunk], for windowed attention only its window.  This gives
+    exact (not masked-full-span) attention FLOPs both on hardware and in
+    XLA's ``cost_analysis``.
+
+    unroll=False: a ``lax.scan`` with full-span masking, for sequences where
+    unrolling would bloat the HLO.
+    """
+    B, Sq, H, Dh = q.shape
+    Skv = k.shape[1]
+    if Sq <= chunk or Sq % chunk != 0:
+        return _attn_block(q, k, v, q_start=q_offset, kv_start=0,
+                           causal=causal, window=window, kv_len=kv_len)
+    nc = Sq // chunk
+
+    if unroll:
+        outs = []
+        for i in range(nc):
+            qc = lax.slice_in_dim(q, i * chunk, (i + 1) * chunk, axis=1)
+            qs_start = q_offset + i * chunk
+            if window:
+                span = min(Skv, window + chunk)
+                start = max(0, min(qs_start + chunk - span, Skv - span))
+            elif causal and q_offset == 0:
+                start, span = 0, min(Skv, (i + 1) * chunk)
+            else:
+                start, span = 0, Skv
+            kc = lax.slice_in_dim(k, start, start + span, axis=1)
+            vc = lax.slice_in_dim(v, start, start + span, axis=1)
+            outs.append(_attn_block(qc, kc, vc, q_start=qs_start,
+                                    kv_start=start, causal=causal,
+                                    window=window, kv_len=kv_len))
+        return jnp.concatenate(outs, axis=1)
+
+    qs = jnp.moveaxis(q.reshape(B, nc, chunk, H, Dh), 1, 0)   # (nc, B, C, H, Dh)
+    span = min(Skv, window + chunk) if window else None
+
+    def body(_, inp):
+        qc, i = inp
+        qs_start = q_offset + i * chunk
+        if span is not None and span < Skv:
+            start = jnp.clip(qs_start + chunk - span, 0, Skv - span)
+            kc = lax.dynamic_slice_in_dim(k, start, span, axis=1)
+            vc = lax.dynamic_slice_in_dim(v, start, span, axis=1)
+            out = _attn_block(qc, kc, vc, q_start=qs_start, kv_start=start,
+                              causal=causal, window=window, kv_len=kv_len)
+        else:
+            out = _attn_block(qc, k, v, q_start=qs_start, kv_start=0,
+                              causal=causal, window=window, kv_len=kv_len)
+        return None, out
+
+    _, o = lax.scan(body, None, (qs, jnp.arange(nc)))
+    return jnp.moveaxis(o, 0, 1).reshape(B, Sq, H, v.shape[-1])
+
+
+# ---------------------------------------------------------------------------
+# MoE with capacity-based sort-free dispatch (gather/scatter, no one-hot GEMM)
+# ---------------------------------------------------------------------------
+
+def moe_ffn(x: jax.Array, gate_w: jax.Array, w1: jax.Array, w3: jax.Array,
+            w2: jax.Array, *, num_experts: int, k: int, capacity_factor: float,
+            act: str = "silu", block_tokens: int = 0) -> Tuple[jax.Array, jax.Array]:
+    """Top-k MoE FFN.  x (T, D) -> (T, D), plus aux load-balance loss.
+
+    Dispatch is a scatter into per-expert slots (no T x E x C one-hot einsum);
+    combine is a gather.  ``block_tokens`` > 0 processes tokens in sequential
+    blocks (scan) to bound dispatch memory at large T.
+    """
+    T, D = x.shape
+    E = num_experts
+
+    def one_block(xb):
+        Tb = xb.shape[0]
+        C = max(8, int(math.ceil(Tb * k * capacity_factor / E)))
+        logits = jnp.einsum("td,de->te", xb, gate_w).astype(jnp.float32)
+        probs = jax.nn.softmax(logits, axis=-1)
+        topv, topi = lax.top_k(probs, k)                    # (Tb, k)
+        topv = topv / jnp.clip(topv.sum(-1, keepdims=True), 1e-9)
+        flat_e = topi.reshape(-1)                            # (Tb*k,)
+        oh = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)
+        pos_in_e = (jnp.cumsum(oh, axis=0) - 1)
+        pos_in_e = jnp.sum(pos_in_e * oh, axis=-1)           # (Tb*k,)
+        keep = pos_in_e < C
+        slot = jnp.where(keep, flat_e * C + pos_in_e, E * C)  # overflow -> E*C
+        # dispatch: scatter token rows into slots
+        tok_idx = jnp.repeat(jnp.arange(Tb), k)
+        buf = jnp.zeros((E * C + 1, D), dtype=xb.dtype).at[slot].set(xb[tok_idx])
+        xe = buf[: E * C].reshape(E, C, D)
+        h = act_fn(act)(jnp.einsum("ecd,edf->ecf", xe, w1))
+        h = h * jnp.einsum("ecd,edf->ecf", xe, w3)
+        ye = jnp.einsum("ecf,efd->ecd", h, w2)
+        yflat = jnp.concatenate(
+            [ye.reshape(E * C, D), jnp.zeros((1, D), dtype=ye.dtype)], axis=0)
+        yk = yflat[slot].reshape(Tb, k, D)
+        out = jnp.einsum("tkd,tk->td", yk, topv.astype(yk.dtype))
+        # aux: load-balance loss (Switch-style)
+        me = probs.mean(axis=0)                              # (E,)
+        ce = jnp.bincount(flat_e, length=E).astype(jnp.float32) / (Tb * k)
+        aux = E * jnp.sum(me * ce)
+        return out, aux
+
+    if block_tokens and T > block_tokens and T % block_tokens == 0:
+        nb = T // block_tokens
+        xs = x.reshape(nb, block_tokens, D)
+        def body(_, xb):
+            return None, one_block(xb)
+        _, (outs, auxs) = lax.scan(body, None, xs)
+        return outs.reshape(T, D), jnp.mean(auxs)
+    return one_block(x)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (RecurrentGemma) — associative-scan linear recurrence
+# ---------------------------------------------------------------------------
+
+def rglru(x: jax.Array, gate_x: jax.Array, gate_a: jax.Array, log_a: jax.Array,
+          h0: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+    """Real-Gated Linear Recurrent Unit.
+
+    x, gate_x, gate_a: (B, S, W).  log_a: (W,) learnable (Lambda).
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t),
+    a_t = exp(c * log_sigmoid(Lambda) * r_t),  c = -8.
+    Returns (h_seq (B,S,W), h_last (B,W)).
+    """
+    c = -8.0
+    r = jax.nn.sigmoid(gate_a.astype(jnp.float32))
+    i = jax.nn.sigmoid(gate_x.astype(jnp.float32))
+    log_a_t = c * r * jax.nn.softplus(log_a.astype(jnp.float32))      # log a_t <= 0
+    a = jnp.exp(log_a_t)
+    mult = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a_t), 1e-12))
+    b = mult * i * x.astype(jnp.float32)
+    if h0 is not None:
+        # fold h0 into the first step
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(p, q):
+        a1, b1 = p
+        a2, b2 = q
+        return a1 * a2, a2 * b1 + b2
+
+    a_s, h = lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(x.dtype), h[:, -1].astype(x.dtype)
+
+
+def rglru_step(xt, gxt, gat, log_a, h_prev):
+    """Single-token RG-LRU update for decode.  xt (B, W)."""
+    c = -8.0
+    r = jax.nn.sigmoid(gat.astype(jnp.float32))
+    i = jax.nn.sigmoid(gxt.astype(jnp.float32))
+    log_a_t = c * r * jax.nn.softplus(log_a.astype(jnp.float32))
+    a = jnp.exp(log_a_t)
+    mult = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a_t), 1e-12))
+    h = a * h_prev.astype(jnp.float32) + mult * i * xt.astype(jnp.float32)
+    return h.astype(xt.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 SSD (state-space duality), chunked
+# ---------------------------------------------------------------------------
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+                Cm: jax.Array, *, chunk: int,
+                h0: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+    """Mamba-2 SSD forward.
+
+    x  (B, S, H, P)   input heads
+    dt (B, S, H)      softplus'd step sizes (>0)
+    A  (H,)           negative state decay (A < 0 as -exp(A_log))
+    Bm (B, S, G, N), Cm (B, S, G, N)  input/output projections (G groups)
+    Returns (y (B, S, H, P), final_state (B, H, P, N)).
+
+    Intra-chunk is the quadratic "attention-like" term; inter-chunk state is
+    carried with an associative scan over chunk summaries (no while loop).
+    """
+    Bsz, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+    rep = H // G
+
+    xf = x.reshape(Bsz, nc, Q, H, P)
+    dtf = dt.astype(jnp.float32).reshape(Bsz, nc, Q, H)
+    Bf = Bm.reshape(Bsz, nc, Q, G, N)
+    Cf = Cm.reshape(Bsz, nc, Q, G, N)
+
+    dA = dtf * A.astype(jnp.float32)[None, None, None, :]     # (B,nc,Q,H) <= 0
+    cum = jnp.cumsum(dA, axis=2)                              # within-chunk cumsum
+    seg_total = cum[:, :, -1, :]                              # (B,nc,H)
+
+    # --- intra-chunk (quadratic within Q) ---------------------------------
+    # L[i,j] = exp(cum_i - cum_j) for i >= j
+    Li = cum[:, :, :, None, :] - cum[:, :, None, :, :]        # (B,nc,Q,Q,H)
+    mask = jnp.tril(jnp.ones((Q, Q), dtype=bool))
+    Lmat = jnp.where(mask[None, None, :, :, None], jnp.exp(Li), 0.0)
+    CB = jnp.einsum("bcqgn,bckgn->bcqkg", Cf.astype(jnp.float32),
+                    Bf.astype(jnp.float32))                   # (B,nc,Q,Q,G)
+    CB = jnp.repeat(CB, rep, axis=-1)                         # (B,nc,Q,Q,H)
+    W = CB * Lmat * dtf[:, :, None, :, :]                     # weight on x_j
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", W, xf.astype(jnp.float32))
+
+    # --- chunk state summaries --------------------------------------------
+    # state_c = sum_j exp(seg_total - cum_j) * dt_j * B_j (x) x_j
+    decay_to_end = jnp.exp(seg_total[:, :, None, :] - cum)    # (B,nc,Q,H)
+    Bh = jnp.repeat(Bf, rep, axis=3)                          # (B,nc,Q,H,N)
+    wgt = (dtf * decay_to_end)[..., None]                     # (B,nc,Q,H,1)
+    states = jnp.einsum("bcqhn,bcqhp->bchpn", Bh.astype(jnp.float32),
+                        xf.astype(jnp.float32) * wgt)         # (B,nc,H,P,N)
+
+    # --- inter-chunk recurrence over chunk dim (associative scan) ----------
+    seg_decay = jnp.exp(seg_total)                            # (B,nc,H)
+    if h0 is not None:
+        states = states.at[:, 0].add(seg_decay[:, 0][..., None, None]
+                                     * h0.astype(jnp.float32))
+
+    def combine(p, q):
+        a1, s1 = p
+        a2, s2 = q
+        return a1 * a2, a2[..., None, None] * s1 + s2
+
+    _, carried = lax.associative_scan(combine, (seg_decay, states), axis=1)
+    # state entering chunk c = carried[c-1]
+    h_prev = jnp.concatenate(
+        [jnp.zeros_like(carried[:, :1]) if h0 is None
+         else h0.astype(jnp.float32)[:, None], carried[:, :-1]], axis=1)
+
+    # --- inter-chunk contribution ------------------------------------------
+    decay_from_start = jnp.exp(cum)                           # (B,nc,Q,H)
+    Ch = jnp.repeat(Cf, rep, axis=3)                          # (B,nc,Q,H,N)
+    y_inter = jnp.einsum("bcqhn,bchpn->bcqhp", Ch.astype(jnp.float32), h_prev)
+    y_inter = y_inter * decay_from_start[..., None]
+
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P).astype(x.dtype)
+    return y, carried[:, -1].astype(jnp.float32)
+
+
+def ssd_step(xt, dtt, A, Bt, Ct, h_prev):
+    """Single-token SSD state update for decode.
+
+    xt (B,H,P), dtt (B,H), Bt/Ct (B,G,N), h_prev (B,H,P,N) fp32.
+    """
+    G = Bt.shape[1]
+    H = xt.shape[1]
+    rep = H // G
+    dA = jnp.exp(dtt.astype(jnp.float32) * A.astype(jnp.float32)[None, :])  # (B,H)
+    Bh = jnp.repeat(Bt.astype(jnp.float32), rep, axis=1)     # (B,H,N)
+    Ch = jnp.repeat(Ct.astype(jnp.float32), rep, axis=1)
+    h = h_prev * dA[..., None, None] + (
+        dtt.astype(jnp.float32)[..., None, None]
+        * xt.astype(jnp.float32)[..., None] * Bh[:, :, None, :])
+    y = jnp.einsum("bhpn,bhn->bhp", h, Ch)
+    return y.astype(xt.dtype), h
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, state: Optional[jax.Array] = None):
+    """Depthwise causal conv via explicit shifts (width K small).
+
+    x (B, S, C), w (K, C).  Returns (y, new_state (B, K-1, C))."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), dtype=x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(K))
+    new_state = xp[:, -(K - 1):, :] if K > 1 else jnp.zeros_like(pad)
+    return y.astype(x.dtype), new_state

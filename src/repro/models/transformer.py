@@ -1,0 +1,590 @@
+"""The unified architecture family.
+
+One functional model covers all ten assigned architectures: dense GQA
+(optionally qk-norm / QKV-bias), MLA (latent attention), MoE, hybrid
+RG-LRU + local attention, Mamba-2 SSD, M-RoPE VLM backbones and the Whisper
+encoder-decoder.  Layers are stacked per repeating ``block_pattern`` group
+and scanned (``lax.scan``) for O(1) HLO size; pattern remainders are applied
+as unscanned layers.
+
+Params are described by ``PDef`` descriptors carrying *logical* axis names;
+``repro.distributed.sharding`` maps those to mesh ``PartitionSpec``s.  The
+same descriptors drive ``jax.eval_shape``-based spec trees for the dry-run
+(no allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+Pytree = Any
+
+
+# ---------------------------------------------------------------------------
+# param descriptors
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class PDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]          # logical axis names (or None)
+    init: str = "normal"                     # normal | zeros | ones | lru | ssm_a | dtbias
+    scale: float = 0.02
+
+    def with_stack(self, n: int) -> "PDef":
+        return PDef((n,) + self.shape, ("layer",) + self.axes, self.init, self.scale)
+
+
+def _dense(din, dout, ax_in="fsdp", ax_out="tp", scale=0.02):
+    return PDef((din, dout), (ax_in, ax_out), "normal", scale)
+
+
+def _norm(d):
+    return PDef((d,), (None,), "zeros")
+
+
+# ---------------------------------------------------------------------------
+# per-block param definitions
+# ---------------------------------------------------------------------------
+
+def attn_defs(cfg: ModelConfig, cross: bool = False) -> Dict[str, PDef]:
+    D = cfg.d_model
+    Dh = cfg.resolved_head_dim
+    H, KV = cfg.num_heads, cfg.num_kv_heads
+    out: Dict[str, PDef] = {"ln": _norm(D)}
+    if cfg.attention == "mla" and not cross:
+        qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+        dn, dr, dv = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+        out.update(
+            wq_a=_dense(D, qr), q_ln=_norm(qr),
+            wq_b=_dense(qr, H * (dn + dr)),
+            wkv_a=_dense(D, kvr + dr, ax_out=None), kv_ln=_norm(kvr),
+            wk_b=_dense(kvr, H * dn),
+            wv_b=_dense(kvr, H * dv),
+            wo=_dense(H * dv, D, ax_in="tp", ax_out="fsdp",
+                      scale=0.02 / math.sqrt(2 * max(cfg.num_layers, 1))),
+        )
+        return out
+    out.update(
+        wq=_dense(D, H * Dh),
+        wk=_dense(D, KV * Dh),
+        wv=_dense(D, KV * Dh),
+        wo=_dense(H * Dh, D, ax_in="tp", ax_out="fsdp",
+                  scale=0.02 / math.sqrt(2 * max(cfg.num_layers, 1))),
+    )
+    if cfg.qkv_bias and not cross:
+        out.update(bq=PDef((H * Dh,), ("tp",), "zeros"),
+                   bk=PDef((KV * Dh,), ("tp",), "zeros"),
+                   bv=PDef((KV * Dh,), ("tp",), "zeros"))
+    if cfg.qk_norm and not cross:
+        out.update(qn=_norm(Dh), kn=_norm(Dh))
+    return out
+
+
+def mlp_defs(cfg: ModelConfig) -> Dict[str, PDef]:
+    D, F = cfg.d_model, cfg.d_ff
+    return {
+        "ln": _norm(D),
+        "w1": _dense(D, F),
+        "w3": _dense(D, F),
+        "w2": _dense(F, D, ax_in="tp", ax_out="fsdp",
+                     scale=0.02 / math.sqrt(2 * max(cfg.num_layers, 1))),
+    }
+
+
+def moe_defs(cfg: ModelConfig) -> Dict[str, PDef]:
+    D = cfg.d_model
+    E, Fe = cfg.num_experts, (cfg.moe_d_ff or cfg.d_ff)
+    return {
+        "ln": _norm(D),
+        "wg": PDef((D, E), (None, None), "normal"),
+        "w1": PDef((E, D, Fe), ("expert", "fsdp", None), "normal"),
+        "w3": PDef((E, D, Fe), ("expert", "fsdp", None), "normal"),
+        "w2": PDef((E, Fe, D), ("expert", None, "fsdp"), "normal",
+                   0.02 / math.sqrt(2 * max(cfg.num_layers, 1))),
+    }
+
+
+def rglru_defs(cfg: ModelConfig) -> Dict[str, PDef]:
+    D = cfg.d_model
+    W = D  # lru width = d_model (RecurrentGemma-2B)
+    return {
+        "ln": _norm(D),
+        "wx": _dense(D, W),
+        "wy": _dense(D, W),
+        "conv_w": PDef((4, W), (None, "tp"), "normal", 0.1),
+        "wga": _dense(W, W, ax_in="tp", ax_out=None),
+        "bga": PDef((W,), (None,), "zeros"),
+        "wgx": _dense(W, W, ax_in="tp", ax_out=None),
+        "bgx": PDef((W,), (None,), "zeros"),
+        "log_a": PDef((W,), (None,), "lru"),
+        "wo": _dense(W, D, ax_in="tp", ax_out="fsdp",
+                     scale=0.02 / math.sqrt(2 * max(cfg.num_layers, 1))),
+    }
+
+
+def ssd_defs(cfg: ModelConfig) -> Dict[str, PDef]:
+    D = cfg.d_model
+    din = cfg.ssm_expand * D
+    G, N = cfg.ssm_ngroups, cfg.ssm_state
+    H = din // cfg.ssm_head_dim
+    conv_ch = din + 2 * G * N
+    return {
+        "ln": _norm(D),
+        "in_proj": _dense(D, 2 * din + 2 * G * N + H),
+        "conv_w": PDef((cfg.ssm_conv, conv_ch), (None, "tp"), "normal", 0.1),
+        "a_log": PDef((H,), (None,), "ssm_a"),
+        "d_skip": PDef((H,), (None,), "ones"),
+        "dt_bias": PDef((H,), (None,), "dtbias"),
+        "out_ln": _norm(din),
+        "out_proj": _dense(din, D, ax_in="tp", ax_out="fsdp",
+                           scale=0.02 / math.sqrt(2 * max(cfg.num_layers, 1))),
+    }
+
+
+def block_defs(cfg: ModelConfig, kind: str, decoder: bool = True) -> Dict[str, Any]:
+    """One block = mixer (+ optional cross-attn) (+ FFN)."""
+    d: Dict[str, Any] = {}
+    if kind == "attn":
+        d["attn"] = attn_defs(cfg)
+    elif kind == "rglru":
+        d["rec"] = rglru_defs(cfg)
+    elif kind == "ssd":
+        d["ssd"] = ssd_defs(cfg)
+    else:
+        raise ValueError(kind)
+    if decoder and cfg.cross_attention:
+        d["xattn"] = attn_defs(cfg, cross=True)
+    if kind != "ssd":  # mamba2 blocks have no separate FFN (d_ff = 0)
+        d["ffn"] = moe_defs(cfg) if cfg.num_experts else mlp_defs(cfg)
+    return d
+
+
+# ---------------------------------------------------------------------------
+# whole-model param definitions
+# ---------------------------------------------------------------------------
+
+def _stack_tree(tree: Pytree, n: int) -> Pytree:
+    return jax.tree.map(lambda pd: pd.with_stack(n), tree,
+                        is_leaf=lambda x: isinstance(x, PDef))
+
+
+def param_defs(cfg: ModelConfig) -> Pytree:
+    D, V = cfg.d_model, cfg.vocab_size
+    period = len(cfg.block_pattern)
+    groups, rem = divmod(cfg.num_layers, period)
+
+    Vp = cfg.padded_vocab      # Megatron-style padding: vocab dim always
+    defs: Dict[str, Any] = {   # shards on the production mesh
+        "embed": PDef((Vp, D), ("vocab", None), "normal", 1.0 / math.sqrt(D)),
+        "final_norm": _norm(D),
+    }
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = PDef((D, Vp), (None, "vocab"), "normal")
+    if cfg.rope == "learned":
+        defs["pos_embed"] = PDef((cfg.max_position, D), (None, None), "normal", 0.01)
+
+    group_tree = {f"b{j}_{kind}": block_defs(cfg, kind)
+                  for j, kind in enumerate(cfg.block_pattern)}
+    defs["blocks"] = _stack_tree(group_tree, groups) if groups else {}
+    defs["rem"] = [block_defs(cfg, cfg.block_pattern[j % period])
+                   for j in range(rem)]
+
+    if cfg.encoder_layers:
+        enc_block = {"attn": attn_defs(cfg), "ffn": mlp_defs(cfg)}
+        defs["encoder"] = {
+            "blocks": _stack_tree(enc_block, cfg.encoder_layers),
+            "final_norm": _norm(D),
+            "pos_embed": PDef((cfg.encoder_seq, D), (None, None), "normal", 0.01),
+        }
+    if cfg.frontend == "vision_patches":
+        # early-fusion projection for precomputed patch embeddings (stub frontend)
+        defs["patch_proj"] = _dense(D, D)
+    return defs
+
+
+def _is_pdef(x):
+    return isinstance(x, PDef)
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Pytree:
+    defs = param_defs(cfg)
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=_is_pdef)
+    keys = jax.random.split(key, len(leaves))
+    dtype = jnp.dtype(cfg.dtype)
+
+    def mk(pd: PDef, k):
+        if pd.init == "zeros":
+            return jnp.zeros(pd.shape, dtype)
+        if pd.init == "ones":
+            return jnp.ones(pd.shape, dtype)
+        if pd.init == "lru":
+            # a in (0.9, 0.999):  log_a = softplus^-1-ish init
+            u = jax.random.uniform(k, pd.shape, jnp.float32, 0.9, 0.999)
+            lam = jnp.log(jnp.expm1(-jnp.log(u) / 8.0))  # softplus(lam) = -ln(u)/8
+            return lam.astype(jnp.float32)
+        if pd.init == "ssm_a":
+            u = jax.random.uniform(k, pd.shape, jnp.float32, 1.0, 16.0)
+            return jnp.log(u).astype(jnp.float32)
+        if pd.init == "dtbias":
+            u = jax.random.uniform(k, pd.shape, jnp.float32, 1e-3, 0.1)
+            return jnp.log(jnp.expm1(u)).astype(jnp.float32)  # inv-softplus
+        return (jax.random.normal(k, pd.shape, jnp.float32) * pd.scale).astype(dtype)
+
+    return treedef.unflatten([mk(pd, k) for pd, k in zip(leaves, keys)])
+
+
+def param_shapes(cfg: ModelConfig) -> Pytree:
+    """ShapeDtypeStructs for all params — no allocation (dry-run path)."""
+    dtype = jnp.dtype(cfg.dtype)
+
+    def mk(pd: PDef):
+        dt = jnp.float32 if pd.init in ("lru", "ssm_a", "dtbias") else dtype
+        return jax.ShapeDtypeStruct(pd.shape, dt)
+
+    return jax.tree.map(mk, param_defs(cfg), is_leaf=_is_pdef)
+
+
+def param_logical_axes(cfg: ModelConfig) -> Pytree:
+    return jax.tree.map(lambda pd: pd.axes, param_defs(cfg), is_leaf=_is_pdef)
+
+
+def count_params(cfg: ModelConfig) -> int:
+    defs = param_defs(cfg)
+    leaves = jax.tree.leaves(defs, is_leaf=_is_pdef)
+    return int(sum(np.prod(pd.shape) for pd in leaves))
+
+
+# ---------------------------------------------------------------------------
+# forward helpers
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Ctx:
+    """Per-call context shared across layers (closure for scans)."""
+    cfg: ModelConfig
+    cos: Optional[jax.Array] = None          # (B,S,half)
+    sin: Optional[jax.Array] = None
+    cos_r: Optional[jax.Array] = None        # MLA rope dims
+    sin_r: Optional[jax.Array] = None
+    enc_out: Optional[jax.Array] = None
+    shard: Callable[[jax.Array, str], jax.Array] = lambda x, kind: x
+    q_offset: Any = 0                        # int or traced scalar
+    kv_len: Any = None
+
+
+def _proj(x, w, b=None):
+    y = x @ w.astype(x.dtype)
+    if b is not None:
+        y = y + b.astype(x.dtype)
+    return y
+
+
+def _heads(x, n, d):
+    return x.reshape(x.shape[0], x.shape[1], n, d)
+
+
+def _rope_ctx(cfg: ModelConfig, positions, head_dim):
+    if cfg.rope == "mrope":
+        return L.mrope_angles(positions, head_dim, cfg.rope_theta, sections=(1, 1, 1))
+    return L.rope_angles(positions, head_dim, cfg.rope_theta)
+
+
+# --- GQA attention block -----------------------------------------------------
+
+def attn_forward(cfg: ModelConfig, p, x, ctx: Ctx, *, window=0,
+                 kv_override=None, cross=False):
+    """Standard (GQA) attention.  kv_override: (k, v) for cross-attention."""
+    Dh = cfg.resolved_head_dim
+    H, KV = cfg.num_heads, cfg.num_kv_heads
+    h = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    q = _heads(_proj(h, p["wq"], p.get("bq")), H, Dh)
+    if kv_override is None:
+        k = _heads(_proj(h, p["wk"], p.get("bk")), KV, Dh)
+        v = _heads(_proj(h, p["wv"], p.get("bv")), KV, Dh)
+    else:
+        k, v = kv_override
+    if cfg.qk_norm and not cross:
+        q = L.rms_norm(q, p["qn"], cfg.norm_eps)
+        if kv_override is None:
+            k = L.rms_norm(k, p["kn"], cfg.norm_eps)
+    if cfg.rope in ("rope", "mrope") and not cross:
+        q = L.apply_rope(q, ctx.cos, ctx.sin)
+        if kv_override is None:
+            k = L.apply_rope(k, ctx.cos, ctx.sin)
+    o = L.blocked_attention(
+        q, k, v, causal=not cross, window=window, chunk=cfg.attn_chunk,
+        unroll=cfg.attn_unroll, q_offset=ctx.q_offset if not cross else 0,
+        kv_len=ctx.kv_len if not cross else None)
+    o = o.reshape(x.shape[0], x.shape[1], H * v.shape[-1])
+    return x + _proj(o, p["wo"])
+
+
+# --- MLA attention block -----------------------------------------------------
+
+def mla_forward(cfg: ModelConfig, p, x, ctx: Ctx):
+    H = cfg.num_heads
+    dn, dr, dv = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    h = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    cq = L.rms_norm(_proj(h, p["wq_a"]), p["q_ln"], cfg.norm_eps)
+    q = _heads(_proj(cq, p["wq_b"]), H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    kv = _proj(h, p["wkv_a"])
+    lat = L.rms_norm(kv[..., :cfg.kv_lora_rank], p["kv_ln"], cfg.norm_eps)
+    k_rope = kv[..., cfg.kv_lora_rank:][:, :, None, :]        # (B,S,1,dr)
+    q_rope = L.apply_rope(q_rope, ctx.cos_r, ctx.sin_r)
+    k_rope = L.apply_rope(k_rope, ctx.cos_r, ctx.sin_r)
+    k_nope = _heads(_proj(lat, p["wk_b"]), H, dn)
+    v = _heads(_proj(lat, p["wv_b"]), H, dv)
+    qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+    kf = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, k_nope.shape[:3] + (dr,))],
+                         axis=-1)
+    o = L.blocked_attention(qf, kf, v, causal=True, chunk=cfg.attn_chunk,
+                            unroll=cfg.attn_unroll, q_offset=ctx.q_offset,
+                            kv_len=ctx.kv_len)
+    o = o.reshape(x.shape[0], x.shape[1], H * dv)
+    return x + _proj(o, p["wo"])
+
+
+# --- FFN ----------------------------------------------------------------------
+
+def ffn_forward(cfg: ModelConfig, p, x, ctx: Ctx):
+    h = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    if cfg.num_experts:
+        B, S, D = h.shape
+        mesh = getattr(ctx.shard, "mesh", None)
+        rules = getattr(ctx.shard, "rules", None)
+        if (mesh is not None and "model" in mesh.shape
+                and mesh.shape["model"] > 1 and cfg.moe_impl != "gather"
+                and cfg.num_experts % mesh.shape["model"] == 0):
+            # expert-parallel fast paths (shard_map; see distributed.moe_ep)
+            from repro.distributed import moe_ep
+            from repro.distributed.sharding import _fit_axes
+            baxes = _fit_axes(B, [a for a in rules.get("batch", ())
+                                  if a in mesh.shape], mesh)
+            kw = dict(num_experts=cfg.num_experts, k=cfg.experts_per_token,
+                      capacity_factor=cfg.moe_capacity_factor, act=cfg.act,
+                      mesh=mesh, batch_axes=baxes)
+            fe = cfg.moe_d_ff or cfg.d_ff
+            if (cfg.moe_impl == "ep_resident" and "data" in mesh.shape
+                    and mesh.shape["data"] > 1 and "data" in baxes
+                    and fe % mesh.shape["data"] == 0):
+                y, aux = moe_ep.moe_ffn_ep_resident(
+                    h, p["wg"], p["w1"], p["w3"], p["w2"], **kw)
+            else:
+                y, aux = moe_ep.moe_ffn_ep(
+                    h, p["wg"], p["w1"], p["w3"], p["w2"], **kw)
+            return x + ctx.shard(y, "act")
+        flat = h.reshape(B * S, D)
+        # token-block scan bounds dispatch memory at large T
+        bt = 0
+        if cfg.moe_block_tokens and B * S > 2 * cfg.moe_block_tokens:
+            bt = cfg.moe_block_tokens
+            while (B * S) % bt:
+                bt //= 2
+        y, aux = L.moe_ffn(
+            flat, p["wg"].astype(h.dtype), p["w1"], p["w3"], p["w2"],
+            num_experts=cfg.num_experts, k=cfg.experts_per_token,
+            capacity_factor=cfg.moe_capacity_factor, act=cfg.act,
+            block_tokens=bt)
+        return x + ctx.shard(y.reshape(B, S, D), "act")
+    a = L.act_fn(cfg.act)(_proj(h, p["w1"]))
+    y = _proj(a * _proj(h, p["w3"]), p["w2"])
+    return x + y
+
+
+# --- RG-LRU block ---------------------------------------------------------------
+
+def rglru_forward(cfg: ModelConfig, p, x, ctx: Ctx, h0=None, conv0=None):
+    h = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    gate = L.act_fn("gelu")(_proj(h, p["wy"]))
+    xb = _proj(h, p["wx"])
+    xb, conv_state = L.causal_conv1d(xb, p["conv_w"], conv0)
+    ga = _proj(xb, p["wga"], p["bga"])
+    gx = _proj(xb, p["wgx"], p["bgx"])
+    seq, h_last = L.rglru(xb, gx, ga, p["log_a"], h0)
+    y = _proj(seq * gate, p["wo"])
+    return x + y, (h_last, conv_state)
+
+
+# --- Mamba-2 SSD block ------------------------------------------------------------
+
+def ssd_forward(cfg: ModelConfig, p, x, ctx: Ctx, h0=None, conv0=None):
+    D = cfg.d_model
+    din = cfg.ssm_expand * D
+    G, N = cfg.ssm_ngroups, cfg.ssm_state
+    H = din // cfg.ssm_head_dim
+    P = cfg.ssm_head_dim
+    h = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    zxbcdt = _proj(h, p["in_proj"])
+    z, xs, BC, dt = jnp.split(zxbcdt, [din, 2 * din, 2 * din + 2 * G * N], axis=-1)
+    conv_in = jnp.concatenate([xs, BC], axis=-1)
+    conv_out, conv_state = L.causal_conv1d(conv_in, p["conv_w"], conv0)
+    conv_out = jax.nn.silu(conv_out)
+    xs, Bm, Cm = jnp.split(conv_out, [din, din + G * N], axis=-1)
+    Bsz, S = x.shape[0], x.shape[1]
+    xh = xs.reshape(Bsz, S, H, P)
+    Bm = Bm.reshape(Bsz, S, G, N)
+    Cm = Cm.reshape(Bsz, S, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+    y, h_last = L.ssd_chunked(xh, dt, A, Bm, Cm, chunk=cfg.ssm_chunk, h0=h0)
+    y = y + xh * p["d_skip"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(Bsz, S, din)
+    y = L.rms_norm(y * jax.nn.silu(z), p["out_ln"], cfg.norm_eps)
+    return x + _proj(y, p["out_proj"]), (h_last, conv_state)
+
+
+# ---------------------------------------------------------------------------
+# full forward (train / prefill, no cache)
+# ---------------------------------------------------------------------------
+
+def apply_block(cfg: ModelConfig, kind: str, p, x, ctx: Ctx):
+    if kind == "attn":
+        if cfg.attention == "mla":
+            x = mla_forward(cfg, p["attn"], x, ctx)
+        else:
+            window = cfg.sliding_window if cfg.family == "hybrid" else 0
+            x = attn_forward(cfg, p["attn"], x, ctx, window=window)
+    elif kind == "rglru":
+        x, _ = rglru_forward(cfg, p["rec"], x, ctx)
+    elif kind == "ssd":
+        x, _ = ssd_forward(cfg, p["ssd"], x, ctx)
+    if "xattn" in p and ctx.enc_out is not None:
+        xp = p["xattn"]
+        hk = L.rms_norm(ctx.enc_out, xp["ln"], cfg.norm_eps)
+        k = _heads(_proj(hk, xp["wk"]), cfg.num_kv_heads, cfg.resolved_head_dim)
+        v = _heads(_proj(hk, xp["wv"]), cfg.num_kv_heads, cfg.resolved_head_dim)
+        x = attn_forward(cfg, xp, x, ctx, kv_override=(k, v), cross=True)
+    if "ffn" in p:
+        x = ffn_forward(cfg, p["ffn"], x, ctx)
+    return ctx.shard(x, "act")
+
+
+def run_decoder_blocks(cfg: ModelConfig, params, x, ctx: Ctx):
+    pattern = cfg.block_pattern
+    period = len(pattern)
+
+    def group_fn(xc, gp):
+        for j, kind in enumerate(pattern):
+            xc = apply_block(cfg, kind, gp[f"b{j}_{kind}"], xc, ctx)
+        return xc
+
+    gf = jax.checkpoint(group_fn) if cfg.remat else group_fn
+    blocks = params["blocks"]
+    if blocks:
+        if cfg.scan_layers:
+            x, _ = lax.scan(lambda c, gp: (gf(c, gp), None), x, blocks)
+        else:
+            G = jax.tree.leaves(blocks)[0].shape[0]
+            for g in range(G):
+                x = gf(x, jax.tree.map(lambda a: a[g], blocks))
+    for j, lp in enumerate(params["rem"]):
+        kind = pattern[j % period]
+
+        def rem_fn(lp_, x_, _kind=kind):
+            return apply_block(cfg, _kind, lp_, x_, ctx)   # ctx via closure
+
+        x = jax.checkpoint(rem_fn)(lp, x) if cfg.remat else rem_fn(lp, x)
+    return x
+
+
+def encode(cfg: ModelConfig, params, frames, shard=lambda x, k: x):
+    """Whisper-style bidirectional encoder over precomputed frame embeddings."""
+    enc = params["encoder"]
+    x = frames + enc["pos_embed"][None, : frames.shape[1]].astype(frames.dtype)
+    ctx = Ctx(cfg=cfg, shard=shard)
+
+    def block(xc, bp):
+        h = L.rms_norm(xc, bp["attn"]["ln"], cfg.norm_eps)
+        Dh = cfg.resolved_head_dim
+        q = _heads(_proj(h, bp["attn"]["wq"]), cfg.num_heads, Dh)
+        k = _heads(_proj(h, bp["attn"]["wk"]), cfg.num_kv_heads, Dh)
+        v = _heads(_proj(h, bp["attn"]["wv"]), cfg.num_kv_heads, Dh)
+        o = L.blocked_attention(q, k, v, causal=False, chunk=cfg.attn_chunk,
+                                unroll=cfg.attn_unroll)
+        o = o.reshape(xc.shape[0], xc.shape[1], cfg.num_heads * Dh)
+        xc = xc + _proj(o, bp["attn"]["wo"])
+        return ffn_forward(cfg, bp["ffn"], xc, ctx)
+
+    bf = jax.checkpoint(block) if cfg.remat else block
+    x, _ = lax.scan(lambda c, bp: (bf(c, bp), None), x, enc["blocks"])
+    return L.rms_norm(x, enc["final_norm"], cfg.norm_eps)
+
+
+def embed_tokens(cfg: ModelConfig, params, tokens):
+    x = params["embed"][tokens]
+    if cfg.family == "hybrid":                       # gemma-style embed scale
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def unembed(cfg: ModelConfig, params, x, shard=lambda x, k: x):
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head.astype(x.dtype)
+    if cfg.padded_vocab != cfg.vocab_size:
+        # mask padding columns (cheap additive bias, fused by XLA)
+        pad_mask = jnp.where(jnp.arange(cfg.padded_vocab) < cfg.vocab_size,
+                             0.0, -1e30).astype(logits.dtype)
+        logits = logits + pad_mask[None, None, :]
+    return shard(logits, "logits")
+
+
+def forward(cfg: ModelConfig, params, tokens, *, positions=None,
+            frontend_embeds=None, encoder_frames=None,
+            shard=lambda x, k: x, q_offset=0, kv_len=None) -> jax.Array:
+    """Full forward over a token block -> logits (train / prefill)."""
+    B, S = tokens.shape
+    x = embed_tokens(cfg, params, tokens)
+    if cfg.frontend == "vision_patches" and frontend_embeds is not None:
+        # early fusion: patch embeddings replace the leading positions
+        pe = _proj(frontend_embeds.astype(x.dtype), params["patch_proj"])
+        x = jnp.concatenate([pe, x[:, pe.shape[1]:]], axis=1)
+    if cfg.rope == "learned":
+        base = q_offset if not isinstance(q_offset, int) else q_offset
+        pos_ids = jnp.arange(S) + base
+        x = x + params["pos_embed"][pos_ids].astype(x.dtype)
+    x = shard(x, "act")
+
+    if positions is None:
+        pos1d = jnp.arange(S)[None, :] + (q_offset if not isinstance(q_offset, int) else q_offset)
+        positions = jnp.broadcast_to(pos1d, (B, S))
+        if cfg.rope == "mrope":
+            positions = jnp.broadcast_to(positions[..., None], (B, S, 3))
+
+    ctx = Ctx(cfg=cfg, shard=shard, q_offset=q_offset, kv_len=kv_len)
+    if cfg.rope in ("rope", "mrope"):
+        ctx.cos, ctx.sin = _rope_ctx(cfg, positions, cfg.resolved_head_dim)
+        if cfg.attention == "mla":
+            ctx.cos_r, ctx.sin_r = _rope_ctx(cfg, positions, cfg.rope_head_dim)
+            ctx.cos = ctx.sin = None
+    if encoder_frames is not None and (cfg.encoder_layers or cfg.cross_attention):
+        # encoder_layers == 0 + cross_attention: pass-through (used by the
+        # dry-run's layer-cost variant protocol)
+        ctx.enc_out = (encode(cfg, params, encoder_frames, shard)
+                       if cfg.encoder_layers else encoder_frames.astype(x.dtype))
+
+    x = run_decoder_blocks(cfg, params, x, ctx)
+    return unembed(cfg, params, x, shard)
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Cross-entropy safe for vocab-sharded logits (no cross-shard gather)."""
+    lg = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(lg, axis=-1, keepdims=True))
+    lse = m[..., 0] + jnp.log(jnp.sum(jnp.exp(lg - m), axis=-1))
+    oh = labels[..., None] == jnp.arange(logits.shape[-1])[None, None, :]
+    lab = jnp.sum(jnp.where(oh, lg, 0.0), axis=-1)
+    return jnp.mean(lse - lab)

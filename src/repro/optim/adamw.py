@@ -1,0 +1,82 @@
+"""Functional AdamW + cosine schedule + gradient clipping + accumulation.
+
+Optimizer state is a pytree shaped like params (mu/nu fp32) and shards with
+the same PartitionSpecs, so FSDP covers optimizer state (ZeRO-style) for
+free.  Optional int8 gradient compression (quantize -> dequantize around the
+data-parallel reduction; see ``repro.distributed.compression``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array            # int32 scalar
+    mu: Pytree                 # fp32
+    nu: Pytree                 # fp32
+
+
+def init(params: Pytree) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                      nu=jax.tree.map(jnp.copy, zeros))
+
+
+def state_shapes(param_shapes: Pytree) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32),
+                         param_shapes)
+    return AdamWState(step=jax.ShapeDtypeStruct((), jnp.int32), mu=zeros, nu=zeros)
+
+
+def cosine_schedule(lr: float, warmup: int, total: int) -> Callable[[jax.Array], jax.Array]:
+    def sched(step):
+        s = step.astype(jnp.float32)
+        warm = lr * (s + 1.0) / max(warmup, 1)
+        frac = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = 0.5 * lr * (1.0 + jnp.cos(jnp.pi * frac))
+        return jnp.where(s < warmup, warm, cos)
+    return sched
+
+
+def global_norm(tree: Pytree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(grads: Pytree, max_norm: float) -> Tuple[Pytree, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+def apply(params: Pytree, grads: Pytree, state: AdamWState, *,
+          sched: Callable[[jax.Array], jax.Array], b1=0.9, b2=0.95,
+          eps=1e-8, weight_decay=0.1, grad_clip=1.0) -> Tuple[Pytree, AdamWState, dict]:
+    grads, gnorm = clip_by_global_norm(grads, grad_clip)
+    step = state.step + 1
+    lr = sched(state.step)
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    def upd(p, g, m, v):
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mh = m / bc1
+        vh = v / bc2
+        delta = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+    new_p = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, AdamWState(step, new_m, new_v), metrics

@@ -1,0 +1,194 @@
+"""DSCS core: latency/energy/cost models, DSE, scheduler, placement,
+executor — plus validation of the paper's headline claims (tolerances
+documented in EXPERIMENTS.md §Paper-validation)."""
+import numpy as np
+import pytest
+
+from repro.core.cost import cost_efficiency_vs_baseline
+from repro.core.dsa import DSAConfig, dsa_power_w, gemm_cycles, GemmShape
+from repro.core.dse import (DSA_POWER_CAP_W, evaluate, optimal_design,
+                            optimal_square_design, pareto, sweep)
+from repro.core.energy import energy_reduction_vs_baseline
+from repro.core.executor import DSCSExecutor
+from repro.core.function import standard_pipeline
+from repro.core.latency import LatencyModel
+from repro.core.placement import StoragePool
+from repro.core.platforms import PLATFORMS
+from repro.core.scheduler import ClusterSim
+from repro.core.workloads import WORKLOADS
+
+LM = LatencyModel()
+
+
+def _mean_speedup(plat, **kw):
+    return float(np.mean([LM.e2e(PLATFORMS["Baseline-CPU"], wl, **kw)
+                          / LM.e2e(PLATFORMS[plat], wl, **kw)
+                          for wl in WORKLOADS.values()]))
+
+
+# --------------------------------------------------------------------------
+# paper claims (§VI) — reproduced within tolerance
+# --------------------------------------------------------------------------
+
+def test_claim_comm_dominates_baseline():
+    comms = []
+    for wl in WORKLOADS.values():
+        bd = LM.pipeline_breakdown(PLATFORMS["Baseline-CPU"], wl)
+        comms.append((bd["net"] + bd["io"]) / bd["total"])
+    assert np.mean(comms) > 0.50          # paper: > 0.55 average
+
+
+def test_claim_dscs_speedups():
+    dsa = _mean_speedup("DSCS-Serverless")
+    assert 2.8 <= dsa <= 4.5              # paper 3.6
+    assert 2.0 <= dsa / _mean_speedup("GPU") <= 3.4       # paper 2.7
+    assert 1.4 <= dsa / _mean_speedup("NS-FPGA") <= 2.3   # paper 1.7
+    assert 2.9 <= dsa / _mean_speedup("NS-ARM") <= 5.5    # paper 3.7
+
+
+def test_claim_ns_ordering():
+    """NS-FPGA > NS-mobile-GPU > ~baseline >= NS-ARM (Fig. 8 ordering)."""
+    assert _mean_speedup("NS-FPGA") > _mean_speedup("NS-Mobile-GPU") > 1.0
+    assert _mean_speedup("NS-ARM") < 1.1
+
+
+def test_claim_energy():
+    dsa = float(np.mean([energy_reduction_vs_baseline(LM, wl, "DSCS-Serverless")
+                         for wl in WORKLOADS.values()]))
+    nsf = float(np.mean([energy_reduction_vs_baseline(LM, wl, "NS-FPGA")
+                         for wl in WORKLOADS.values()]))
+    assert dsa > 3.0                      # paper 3.5 (ours runs higher)
+    assert 1.3 <= dsa / nsf <= 3.2        # paper 1.9
+
+
+def test_claim_cost_efficiency():
+    dsa = float(np.mean([cost_efficiency_vs_baseline(LM, wl, "DSCS-Serverless")
+                         for wl in WORKLOADS.values()]))
+    arm = float(np.mean([cost_efficiency_vs_baseline(LM, wl, "NS-ARM")
+                         for wl in WORKLOADS.values()]))
+    nsf = float(np.mean([cost_efficiency_vs_baseline(LM, wl, "NS-FPGA")
+                         for wl in WORKLOADS.values()]))
+    assert dsa > nsf > 1.0
+    assert 2.2 <= dsa / arm <= 6.5        # paper 3.2
+    assert 1.5 <= dsa / nsf <= 3.2        # paper 2.3
+
+
+def test_claim_sensitivities_monotone():
+    b = [_mean_speedup("DSCS-Serverless", batch=x) for x in (1, 16, 64)]
+    assert b[0] < b[1] < b[2]             # Fig. 13
+    f = [_mean_speedup("DSCS-Serverless", extra_accel_funcs=x)
+         for x in (0, 2, 3)]
+    assert f[0] < f[1] < f[2]             # Fig. 14
+    assert (_mean_speedup("DSCS-Serverless", q=0.99)
+            > _mean_speedup("DSCS-Serverless", q=0.5))     # Fig. 16
+    assert (_mean_speedup("DSCS-Serverless", cold=True)
+            < _mean_speedup("DSCS-Serverless"))            # Fig. 17
+
+
+def test_claim_pcie_insensitive():
+    vals = []
+    for lanes in ("gen3x1", "gen3x16"):
+        lm = LatencyModel()
+        lm.pcie_lanes = lanes
+        vals.append(float(np.mean(
+            [lm.e2e(PLATFORMS["Baseline-CPU"], wl)
+             / lm.e2e(PLATFORMS["DSCS-Serverless"], wl)
+             for wl in WORKLOADS.values()])))
+    assert abs(vals[1] / vals[0] - 1.0) < 0.05             # Fig. 15
+
+
+# --------------------------------------------------------------------------
+# DSE (Fig. 7)
+# --------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def dse_points():
+    return sweep()
+
+
+def test_dse_covers_650_configs(dse_points):
+    assert len(dse_points) >= 400         # paper: >650 incl. repeats; ours 486
+
+
+def test_dse_square_winner_matches_paper(dse_points):
+    sq = optimal_square_design(dse_points)
+    assert (sq.cfg.pe_x, sq.cfg.pe_y) == (128, 128)
+    assert sq.cfg.mem_bw == 38e9          # DDR5
+    paper_pt = evaluate(DSAConfig())
+    assert paper_pt.throughput_fps >= 0.95 * sq.throughput_fps
+    assert 3.0 <= dsa_power_w(DSAConfig()) <= 5.5          # paper 4.2 W
+
+
+def test_dse_1024_infeasible(dse_points):
+    big = evaluate(DSAConfig(pe_x=1024, pe_y=1024,
+                             scratchpad_bytes=32 << 20, mem_bw=38e9))
+    assert not big.feasible
+
+
+def test_dse_pareto_nondominated(dse_points):
+    front = pareto([p for p in dse_points if p.feasible], "power_w")
+    for i, a in enumerate(front):
+        for b in front:
+            if b is a:
+                continue
+            assert not (b.power_w <= a.power_w
+                        and b.throughput_fps > a.throughput_fps + 1e-9)
+
+
+def test_tile_model_monotone_in_membw():
+    g = GemmShape(512, 512, 512)
+    slow = gemm_cycles(DSAConfig(mem_bw=19.2e9), g)[0]
+    fast = gemm_cycles(DSAConfig(mem_bw=460e9), g)[0]
+    assert fast <= slow
+
+
+# --------------------------------------------------------------------------
+# scheduler / placement / executor
+# --------------------------------------------------------------------------
+
+def test_scheduler_accelerates_and_falls_back():
+    sim = ClusterSim(n_dscs=4, n_cpu=8, hedge_budget_s=0.05, seed=0)
+    pipes = [standard_pipeline("asset_damage")]
+    res = sim.run(pipes, rps=200, duration_s=10)     # overload 4 DSAs
+    assert sim.telemetry.get("dscs_dispatch") > 0
+    assert sim.telemetry.get("dscs_fallback") > 0    # busy -> CPU fallback
+    accel = [r for r in res if r.accelerated]
+    fallb = [r for r in res if not r.accelerated]
+    assert accel and fallb
+
+
+def test_scheduler_throughput_dscs_beats_cpu():
+    pipes = [standard_pipeline("content_moderation")]
+    pipes_cpu = [standard_pipeline("content_moderation", accelerate=False)]
+    dscs = ClusterSim(n_dscs=50, n_cpu=50, seed=1).max_throughput(
+        pipes, sla_s=0.5, duration_s=10)
+    cpu = ClusterSim(n_dscs=0, n_cpu=50, seed=1).max_throughput(
+        pipes_cpu, sla_s=0.5, duration_s=10)
+    assert dscs / cpu > 1.5               # paper 3.1 avg across suite
+
+
+def test_placement_routes_acceleratable_to_dscs_drives():
+    pool = StoragePool(n_plain=8, n_dscs=4)
+    for i in range(64):
+        d = pool.place(f"obj{i}", 1000, "Acceleratable_Storage")
+        assert d.dscs_capable
+    d = pool.locate("obj0")
+    assert d is not None and d.has("obj0")
+
+
+def test_placement_spreads_requests():
+    pool = StoragePool(n_plain=0, n_dscs=8)
+    drives = {pool.place(f"k{i}", 100, "Acceleratable_Storage").drive_id
+              for i in range(200)}
+    assert len(drives) == 8               # independent requests spread out
+
+
+def test_executor_runs_all_workloads():
+    import jax
+    key = jax.random.PRNGKey(0)
+    for wl in WORKLOADS:
+        ex = DSCSExecutor(wl, platform="DSCS-Serverless", image_size=32)
+        rep = ex(ex.make_request(key))
+        assert rep.latency_breakdown["total"] > 0
+        assert rep.energy_breakdown["total"] > 0
+        assert rep.accelerated

@@ -1,0 +1,120 @@
+"""Per-kernel shape/dtype sweeps: pallas_call (interpret) vs ref.py oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 2e-4
+
+
+@pytest.mark.parametrize("m,k,n", [(128, 128, 128), (256, 384, 128),
+                                   (64, 128, 256), (8, 16, 8)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("act", ["none", "relu", "gelu"])
+def test_systolic_matmul(m, k, n, dtype, act):
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    x = jax.random.normal(k1, (m, k), jnp.float32).astype(dtype)
+    w = jax.random.normal(k2, (k, n), jnp.float32).astype(dtype)
+    b = jax.random.normal(k3, (n,), jnp.float32).astype(dtype)
+    got = ops.matmul(x, w, b, act=act, bm=min(64, m), bn=min(64, n),
+                     bk=min(64, k))
+    want = ref.matmul_ref(x, w, b, act=act)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=0.05 if dtype == jnp.bfloat16 else 1e-4,
+                               atol=_tol(dtype) * max(1, k // 64))
+
+
+def test_matmul_padded_arbitrary_shapes():
+    x = jax.random.normal(KEY, (37, 147))
+    w = jax.random.normal(KEY, (147, 53))
+    got = ops.matmul_padded(x, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(x @ w),
+                               rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("b,h,kv,sq,skv,d", [
+    (2, 8, 2, 128, 128, 64), (1, 4, 1, 64, 128, 32), (2, 4, 4, 128, 64, 64)])
+@pytest.mark.parametrize("causal,window", [(True, 0), (False, 0), (True, 48)])
+def test_flash_attention(b, h, kv, sq, skv, d, causal, window):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, h, sq, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, kv, skv, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, kv, skv, d), jnp.float32)
+    got = ops.attention(q, k, v, causal=causal, window=window, bq=32, bk=32)
+    want = ref.attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-3, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtype(dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 2, 64, 32)).astype(dtype)
+    k = jax.random.normal(ks[1], (1, 2, 64, 32)).astype(dtype)
+    v = jax.random.normal(ks[2], (1, 2, 64, 32)).astype(dtype)
+    got = ops.attention(q, k, v, bq=32, bk=32)
+    want = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=0.05, atol=0.03)
+
+
+@pytest.mark.parametrize("m,n", [(256, 256), (64, 384), (8, 128)])
+@pytest.mark.parametrize("act", ["silu", "sigmoid", "tanh"])
+def test_vector_engine_affine(m, n, act):
+    x = jax.random.normal(KEY, (m, n))
+    s = jax.random.normal(KEY, (n,))
+    b = jax.random.normal(KEY, (n,))
+    got = ops.affine_act(x, s, b, act=act)
+    want = ref.affine_act_ref(x, s, b, act=act)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_vector_engine_quant_roundtrip():
+    x = jax.random.normal(KEY, (128, 256)) * 3.0
+    q, s = ops.quantize(x)
+    qr, sr = ref.quantize_int8_ref(x)
+    assert int(jnp.sum(jnp.abs(q.astype(jnp.int32) - qr.astype(jnp.int32)))) == 0
+    xd = ops.dequantize(q, s)
+    # int8 symmetric quantization error bound: scale/2 per element
+    assert float(jnp.max(jnp.abs(xd - x))) <= float(jnp.max(s)) * 0.51
+
+
+@pytest.mark.parametrize("b,s,w", [(2, 64, 128), (4, 128, 256), (1, 32, 128)])
+def test_rglru_kernel(b, s, w):
+    ks = jax.random.split(KEY, 4)
+    x = jax.random.normal(ks[0], (b, s, w)) * 0.2
+    gx = jax.random.normal(ks[1], (b, s, w))
+    ga = jax.random.normal(ks[2], (b, s, w))
+    la = jax.random.normal(ks[3], (w,))
+    h0 = jax.random.normal(ks[0], (b, w)) * 0.1
+    got = ops.rglru(x, gx, ga, la, h0)
+    want = ref.rglru_ref(x, gx, ga, la, h0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("b,s,h,p,g,n,chunk", [
+    (2, 128, 4, 32, 2, 16, 32), (1, 256, 2, 16, 1, 8, 64),
+    (2, 64, 4, 16, 4, 16, 64)])
+def test_ssd_kernel(b, s, h, p, g, n, chunk):
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (b, s, h, p)) * 0.4
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.4)
+    Bm = jax.random.normal(ks[3], (b, s, g, n)) * 0.3
+    Cm = jax.random.normal(ks[4], (b, s, g, n)) * 0.3
+    y, hf = ops.ssd(x, dt, A, Bm, Cm, chunk=chunk)
+    yr, hfr = ref.ssd_ref(x, dt, A, Bm, Cm, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(hf), np.asarray(hfr),
+                               rtol=1e-3, atol=1e-3)

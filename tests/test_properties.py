@@ -1,0 +1,133 @@
+"""Hypothesis property-based tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dsa import DSAConfig, GemmShape, gemm_cycles, network_flops
+from repro.core.latency import LatencyModel
+from repro.core.placement import StoragePool
+from repro.kernels import ref
+from repro.models import layers as L
+from repro.models.transformer import softmax_xent
+
+LM = LatencyModel()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 4096), st.integers(1, 2048), st.integers(1, 2048))
+def test_tile_model_cycles_bound_by_physics(m, k, n):
+    """Total cycles >= both the pure-compute and pure-DMA lower bounds."""
+    cfg = DSAConfig()
+    g = GemmShape(m, k, n)
+    total, comp, dma = gemm_cycles(cfg, g)
+    assert total + 1e-6 >= comp
+    assert total + 1e-6 >= dma
+    # throughput can never exceed the array peak
+    flops = 2.0 * m * k * n
+    assert flops / (total / cfg.freq_hz) <= 2.05 * cfg.pe_x * cfg.pe_y * cfg.freq_hz
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 1 << 24), st.integers(0, 1 << 24))
+def test_latency_monotone_in_size(a, b):
+    lo, hi = sorted((a, b))
+    assert LM.net_read(lo) <= LM.net_read(hi) + 1e-12
+    assert LM.net_write(lo) <= LM.net_write(hi) + 1e-12
+    assert LM.p2p(lo) <= LM.p2p(hi) + 1e-12
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(0.01, 0.99), st.floats(0.01, 0.99))
+def test_latency_tail_quantiles_monotone(q1, q2):
+    lo, hi = sorted((q1, q2))
+    assert LM.net_read(10_000, q=lo) <= LM.net_read(10_000, q=hi) + 1e-12
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 64), st.integers(2, 16), st.integers(1, 4))
+def test_moe_capacity_and_conservation(t, e, k):
+    """Every kept slot holds a valid token; combine weights are a sub-convex
+    mixture (dropped tokens only ever lose mass)."""
+    k = min(k, e)
+    key = jax.random.PRNGKey(t * 131 + e * 7 + k)
+    x = jax.random.normal(key, (t, 8))
+    wg = jax.random.normal(key, (8, e))
+    w1 = jax.random.normal(key, (e, 8, 16)) * 0.1
+    w3 = jax.random.normal(key, (e, 8, 16)) * 0.1
+    w2 = jax.random.normal(key, (e, 16, 8)) * 0.1
+    out, aux = L.moe_ffn(x, wg, w1, w3, w2, num_experts=e, k=k,
+                         capacity_factor=1.25)
+    assert out.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(out)))
+    assert float(aux) >= 0.4   # Switch aux ~1 at balance; small-T noise
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 6), st.integers(2, 50))
+def test_placement_deterministic_and_class_respecting(n_dscs, n_obj):
+    p1 = StoragePool(n_plain=3, n_dscs=n_dscs)
+    p2 = StoragePool(n_plain=3, n_dscs=n_dscs)
+    for i in range(n_obj):
+        d1 = p1.place(f"o{i}", 10, "Acceleratable_Storage")
+        d2 = p2.place(f"o{i}", 10, "Acceleratable_Storage")
+        assert d1.drive_id == d2.drive_id      # deterministic
+        assert d1.dscs_capable                  # class respected
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 4), st.integers(2, 16), st.integers(2, 50))
+def test_softmax_xent_matches_naive(b, s, v):
+    key = jax.random.PRNGKey(b * 100 + s * 10 + v)
+    logits = jax.random.normal(key, (b, s, v))
+    labels = jax.random.randint(key, (b, s), 0, v)
+    got = softmax_xent(logits, labels)
+    lp = jax.nn.log_softmax(logits, axis=-1)
+    want = -jnp.mean(jnp.take_along_axis(lp, labels[..., None], -1))
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 3), st.integers(8, 64), st.integers(8, 64))
+def test_quantize_error_bounded(b, m, n):
+    key = jax.random.PRNGKey(b * 7 + m * 3 + n)
+    x = jax.random.normal(key, (m, n)) * (b * 2.0)
+    q, s = ref.quantize_int8_ref(x)
+    xd = ref.dequantize_int8_ref(q, s)
+    assert float(jnp.max(jnp.abs(xd - x))) <= float(jnp.max(s)) * 0.5 + 1e-6
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 2), st.integers(4, 32), st.integers(8, 32))
+def test_rglru_state_is_contraction(b, s, w):
+    """|a_t| < 1 always: with zero input the state decays monotonically."""
+    key = jax.random.PRNGKey(s * w)
+    x = jnp.zeros((b, s, w))
+    gx = jax.random.normal(key, (b, s, w))
+    ga = jax.random.normal(key, (b, s, w))
+    la = jax.random.normal(key, (w,))
+    h0 = jnp.ones((b, w))
+    seq, last = L.rglru(x, gx, ga, la, h0)
+    seqs = jnp.abs(seq.astype(jnp.float32))
+    assert bool(jnp.all(seqs[:, 0] <= 1.0 + 1e-5))
+    assert bool(jnp.all(seqs[:, -1] <= seqs[:, 0] + 1e-5))
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.sampled_from([32, 64, 128]), st.sampled_from([16, 32, 64]))
+def test_ssd_chunk_invariance(s, chunk):
+    """SSD output must not depend on the chunk size."""
+    key = jax.random.PRNGKey(s + chunk)
+    ks = jax.random.split(key, 5)
+    B, H, P, G, N = 1, 2, 8, 1, 8
+    x = jax.random.normal(ks[0], (B, s, H, P)) * 0.3
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, s, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, s, G, N)) * 0.3
+    Cm = jax.random.normal(ks[4], (B, s, G, N)) * 0.3
+    y1, h1 = L.ssd_chunked(x, dt, A, Bm, Cm, chunk=chunk)
+    y2, h2 = L.ssd_chunked(x, dt, A, Bm, Cm, chunk=s)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2),
+                               rtol=2e-3, atol=2e-3)

@@ -1,0 +1,71 @@
+"""Continuous batcher invariants + paper-suite configs smoke."""
+import numpy as np
+import pytest
+
+from repro.serving.batcher import ContinuousBatcher, Request
+
+
+def _toy_engine():
+    """Deterministic fake engine: next token = last + 1."""
+    def prefill_one(slot, prompt):
+        return int(prompt[-1]) + 1
+
+    def decode_batch(last, active):
+        return (np.asarray(last)[:, 0] + 1) * np.asarray(active)
+
+    return prefill_one, decode_batch
+
+
+def test_batcher_completes_all_and_preserves_order():
+    pre, dec = _toy_engine()
+    b = ContinuousBatcher(4, pre, dec)
+    reqs = [Request(rid=i, prompt=np.array([i * 10], np.int32), max_new=5)
+            for i in range(10)]
+    done = {}
+    for r in reqs:
+        b.submit(r)
+    b.run_until_drained()
+    assert b.stats["completed"] == 10
+    for r in reqs:
+        # token stream is prompt+1, +2, ... (engine semantics preserved
+        # across slot reuse and interleaving)
+        assert r.out == [r.prompt[-1] + 1 + j for j in range(5)]
+
+
+def test_batcher_slot_utilization_reasonable():
+    pre, dec = _toy_engine()
+    b = ContinuousBatcher(4, pre, dec)
+    for i in range(16):
+        b.submit(Request(rid=i, prompt=np.array([0], np.int32), max_new=8))
+    b.run_until_drained()
+    assert b.slot_utilization > 0.9      # continuous batching keeps slots hot
+
+
+def test_batcher_mixed_lengths_free_slots_early():
+    pre, dec = _toy_engine()
+    b = ContinuousBatcher(2, pre, dec)
+    b.submit(Request(rid=0, prompt=np.array([0], np.int32), max_new=2))
+    b.submit(Request(rid=1, prompt=np.array([0], np.int32), max_new=20))
+    b.submit(Request(rid=2, prompt=np.array([0], np.int32), max_new=2))
+    b.run_until_drained()
+    assert b.stats["completed"] == 3
+    # the short third request slotted in long before request 1 finished
+    assert b.steps < 25
+
+
+def test_paper_suite_configs_build():
+    import jax
+    from repro.configs.paper_suite import PAPER_LM_SUITE
+    from repro.models import transformer as T
+    for name, cfg in PAPER_LM_SUITE.items():
+        r = cfg.reduced()
+        params = T.init_params(r, jax.random.PRNGKey(0))
+        tokens = jax.random.randint(jax.random.PRNGKey(1), (1, 16), 0,
+                                    r.vocab_size)
+        kw = {}
+        if r.frontend == "vision_patches":
+            import jax.numpy as jnp
+            kw["frontend_embeds"] = jnp.zeros((1, r.frontend_seq, r.d_model),
+                                              r.dtype)
+        logits = T.forward(r, params, tokens, **kw)
+        assert logits.shape[-1] in (r.vocab_size, r.padded_vocab)

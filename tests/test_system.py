@@ -1,0 +1,82 @@
+"""End-to-end behaviour tests for the whole system."""
+import glob
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+
+def test_training_reduces_loss(tmp_path):
+    """~100M-class family member (reduced) trains: loss must drop."""
+    from repro.launch.train import train
+    losses = train("qwen3-8b", smoke=True, steps=15, batch=4, seq=64,
+                   ckpt_dir=str(tmp_path), checkpoint_every=100, log_every=100)
+    assert losses[-1] < losses[0] - 0.3
+
+
+def test_serving_generates(tmp_path):
+    from repro.launch.serve import serve
+    out = serve("qwen1.5-4b", smoke=True, batch=2, prompt=16, gen=4)
+    assert out["generated"].shape == (2, 4)
+    assert out["generated"].dtype == np.int32
+
+
+def test_serving_ssm_generates():
+    from repro.launch.serve import serve
+    out = serve("mamba2-370m", smoke=True, batch=2, prompt=16, gen=4)
+    assert out["generated"].shape == (2, 4)
+
+
+def test_dscs_pipeline_end_to_end():
+    """The paper's Fig. 2 flow executes numerically with kernels engaged."""
+    from repro.core.executor import DSCSExecutor
+    ex = DSCSExecutor("asset_damage", platform="DSCS-Serverless",
+                      image_size=32)
+    rep = ex(ex.make_request(jax.random.PRNGKey(0)))
+    assert rep.accelerated
+    assert rep.result.shape == (1,)
+    bd = rep.latency_breakdown
+    # near-storage: no network for f1/f2 intermediates — only f3's read
+    assert bd["net"] < bd["total"] * 0.6
+
+
+def test_dryrun_records_complete_and_coherent():
+    """Every (arch x shape x mesh) cell has a record; ok cells carry
+    memory/cost/roofline; skips are only long_500k x quadratic archs."""
+    from repro.configs import cells
+    files = glob.glob("results/dryrun/*.json")
+    if not files:
+        pytest.skip("dry-run results not present in this checkout")
+    recs = {(r["arch"], r["shape"], r["mesh"]): r
+            for r in (json.load(open(f)) for f in files)}
+    want = [(a.name, s.name, m) for a, s, _ in cells()
+            for m in ("single", "multi")]
+    missing = [w for w in want if w not in recs]
+    assert not missing, missing[:5]
+    for key, r in recs.items():
+        assert r["status"] in ("ok", "skipped"), (key, r.get("error"))
+        if r["status"] == "skipped":
+            assert r["shape"] == "long_500k"
+        else:
+            assert r["memory"]["peak_bytes"] > 0
+            t = r["roofline"]
+            assert t["flops_per_chip"] > 0
+            assert t["dominant"] in ("compute", "memory", "collective")
+
+
+def test_dryrun_flop_accounting_sane():
+    """Corrected HLO FLOPs within sane multiples of MODEL_FLOPS."""
+    files = glob.glob("results/dryrun/*__train_4k__multi__train.json")
+    if not files:
+        pytest.skip("dry-run results not present")
+    for f in files:
+        r = json.load(open(f))
+        if r["status"] != "ok":
+            continue
+        t = r["roofline"]
+        hlo_total = t["flops_per_chip"] * t["chips"]
+        # train: fwd+bwd+remat ~ 8/6 x MODEL_FLOPS; allow dispatch overheads
+        ratio = hlo_total / t["model_flops_total"]
+        assert 0.9 < ratio < 12.0, (r["arch"], ratio)
