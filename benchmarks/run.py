@@ -1,9 +1,14 @@
 """Benchmark harness: one function per paper table/figure, plus kernel
 micro-benchmarks and the roofline summary.  Prints ``name,us_per_call,
 derived`` CSV (for analytic figures the middle column is the metric value).
+
+    python -m benchmarks.run                  # everything
+    python -m benchmarks.run --only fig19     # one figure family
+    python -m benchmarks.run --list           # enumerate figures
 """
 from __future__ import annotations
 
+import argparse
 import sys
 import time
 
@@ -74,10 +79,22 @@ def _roofline_summary():
     return rows
 
 
-def main() -> None:
+def main(argv=None) -> None:
     from benchmarks.figures import ALL_FIGURES
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", default="",
+                    help="run only figures whose name contains this")
+    ap.add_argument("--list", action="store_true", dest="list_figs",
+                    help="print figure names and exit")
+    args = ap.parse_args(argv)
+    figures = [f for f in ALL_FIGURES
+               if args.only.lower() in f.__name__.lower()]
+    if args.list_figs:
+        for fig in figures:
+            print(fig.__name__)
+        return
     print("name,us_per_call,derived")
-    for fig in ALL_FIGURES:
+    for fig in figures:
         t0 = time.perf_counter()
         rows = fig()
         dt = (time.perf_counter() - t0) * 1e6
@@ -85,6 +102,8 @@ def main() -> None:
             print(f"{name},{val:.6g},{derived}")
         print(f"{fig.__name__}/wall,{dt:.1f},us")
         sys.stdout.flush()
+    if args.only:
+        return
     for name, us, derived in _kernel_micro():
         print(f"{name},{us:.1f},{derived}")
     for name, val, derived in _roofline_summary():

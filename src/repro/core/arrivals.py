@@ -1,0 +1,163 @@
+"""Pluggable request-arrival processes for the cluster engine.
+
+The fleet-level figures (Fig. 12 throughput-under-SLA, Fig. 16 straggler
+mitigation) are sensitive to the *shape* of the offered load, not just its
+mean rate.  This module provides the arrival processes the engine, the
+benchmark sweeps and the examples share:
+
+  * ``PoissonProcess``   — memoryless baseline (the paper's setting)
+  * ``BurstyOnOff``      — 2-state MMPP: exponential ON/OFF phases with a
+                           burst_factor rate multiplier while ON, calibrated
+                           so the long-run mean rate equals ``rate``
+  * ``DiurnalProcess``   — nonhomogeneous Poisson with a sinusoidal rate
+                           profile (thinning / Lewis-Shedler sampling)
+  * ``TraceReplay``      — deterministic replay of recorded arrival times
+
+Every process draws exclusively from the ``numpy.random.Generator`` handed
+to :meth:`times`, so a single engine seed reproduces the full arrival
+stream.  Processes are value objects: ``with_rate`` returns a rescaled copy
+(used by the throughput binary search) without mutating the original.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, replace
+from typing import Dict, Tuple, Type
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ArrivalProcess:
+    """Base class: a distribution over sorted arrival-time vectors."""
+    rate: float                         # long-run mean requests/second
+
+    def times(self, duration_s: float, rng: np.random.Generator) -> np.ndarray:
+        raise NotImplementedError
+
+    def with_rate(self, rate: float) -> "ArrivalProcess":
+        """A copy of this process rescaled to a new mean rate."""
+        return replace(self, rate=rate)
+
+
+@dataclass(frozen=True)
+class PoissonProcess(ArrivalProcess):
+    """Homogeneous Poisson arrivals (i.i.d. exponential gaps)."""
+
+    def times(self, duration_s: float, rng: np.random.Generator) -> np.ndarray:
+        if self.rate <= 0.0 or duration_s <= 0.0:
+            return np.empty(0)
+        # draw in blocks until we pass duration_s
+        out = []
+        t = 0.0
+        block = max(16, int(self.rate * duration_s * 1.2))
+        while t < duration_s:
+            gaps = rng.exponential(1.0 / self.rate, size=block)
+            ts = t + np.cumsum(gaps)
+            out.append(ts)
+            t = float(ts[-1])
+        ts = np.concatenate(out)
+        return ts[ts < duration_s]
+
+
+@dataclass(frozen=True)
+class BurstyOnOff(ArrivalProcess):
+    """Markov-modulated Poisson process with ON bursts.
+
+    While ON the instantaneous rate is ``burst_factor * rate``; the OFF rate
+    is solved so the long-run mean equals ``rate`` given the duty cycle
+    ``mean_on_s / (mean_on_s + mean_off_s)`` (floored at zero when the burst
+    carries more than the whole budget).
+    """
+    burst_factor: float = 4.0
+    mean_on_s: float = 2.0
+    mean_off_s: float = 8.0
+
+    def _phase_rates(self) -> Tuple[float, float]:
+        if self.mean_on_s <= 0.0 or self.mean_off_s <= 0.0:
+            raise ValueError("mean_on_s and mean_off_s must be positive; "
+                             "for an unmodulated stream use PoissonProcess")
+        duty = self.mean_on_s / (self.mean_on_s + self.mean_off_s)
+        rate_on = self.burst_factor * self.rate
+        rate_off = max(0.0, self.rate * (1.0 - self.burst_factor * duty)
+                       / (1.0 - duty))
+        return rate_on, rate_off
+
+    def times(self, duration_s: float, rng: np.random.Generator) -> np.ndarray:
+        if self.rate <= 0.0 or duration_s <= 0.0:
+            return np.empty(0)
+        rate_on, rate_off = self._phase_rates()
+        duty = self.mean_on_s / (self.mean_on_s + self.mean_off_s)
+        out = []
+        # draw the initial phase from the stationary duty cycle so even
+        # short windows offer ~rate on average
+        t, on = 0.0, bool(rng.uniform() < duty)
+        while t < duration_s:
+            mean = self.mean_on_s if on else self.mean_off_s
+            hold = float(rng.exponential(mean))
+            r = rate_on if on else rate_off
+            if r > 0.0 and hold > 0.0:
+                n = int(rng.poisson(r * hold))
+                if n:
+                    out.append(t + np.sort(rng.uniform(0.0, hold, size=n)))
+            t += hold
+            on = not on
+        if not out:
+            return np.empty(0)
+        ts = np.concatenate(out)
+        return ts[ts < duration_s]
+
+
+@dataclass(frozen=True)
+class DiurnalProcess(ArrivalProcess):
+    """Sinusoidal daily profile: rate(t) = rate * (1 + amp*sin(2πt/period)).
+
+    Sampled by thinning against the peak rate (Lewis & Shedler), so the
+    stream is an exact nonhomogeneous Poisson process.
+    """
+    amplitude: float = 0.6              # in [0, 1)
+    period_s: float = 60.0              # compressed "day"
+
+    def times(self, duration_s: float, rng: np.random.Generator) -> np.ndarray:
+        if self.rate <= 0.0 or duration_s <= 0.0:
+            return np.empty(0)
+        lam_max = self.rate * (1.0 + self.amplitude)
+        cand = PoissonProcess(lam_max).times(duration_s, rng)
+        if cand.size == 0:
+            return cand
+        lam = self.rate * (1.0 + self.amplitude
+                           * np.sin(2.0 * math.pi * cand / self.period_s))
+        keep = rng.uniform(0.0, 1.0, size=cand.size) < lam / lam_max
+        return cand[keep]
+
+
+@dataclass(frozen=True)
+class TraceReplay(ArrivalProcess):
+    """Replay recorded arrival times verbatim (rate is informational)."""
+    trace: Tuple[float, ...] = ()
+
+    def times(self, duration_s: float, rng: np.random.Generator) -> np.ndarray:
+        ts = np.sort(np.asarray(self.trace, dtype=float))
+        return ts[(ts >= 0.0) & (ts < duration_s)]
+
+    def with_rate(self, rate: float) -> "ArrivalProcess":
+        raise TypeError("TraceReplay cannot be rescaled to a target rate; "
+                        "use a stochastic process for throughput search")
+
+
+ARRIVAL_KINDS: Dict[str, Type[ArrivalProcess]] = {
+    "poisson": PoissonProcess,
+    "bursty": BurstyOnOff,
+    "diurnal": DiurnalProcess,
+    "trace": TraceReplay,
+}
+
+
+def make_arrivals(kind: str, rate: float, **kw) -> ArrivalProcess:
+    """Factory used by benchmarks/examples: ``make_arrivals("bursty", 100)``."""
+    try:
+        cls = ARRIVAL_KINDS[kind]
+    except KeyError:
+        raise ValueError(f"unknown arrival kind {kind!r}; "
+                         f"choose from {sorted(ARRIVAL_KINDS)}") from None
+    return cls(rate=rate, **kw)

@@ -1,0 +1,393 @@
+"""Discrete-event cluster engine (§V scheduler, §VI-C straggler study).
+
+A genuine event-driven simulator of the extended Kubernetes scheduler from
+the paper, replacing the per-node "next-free clock" approximation that used
+to live in ``scheduler.py``.  The event model:
+
+  * a binary heap of ``_Event``s, three kinds:
+      - ``arrival``  — a request enters the system (times come from a
+        pluggable :mod:`repro.core.arrivals` process)
+      - ``finish``   — a running copy completes service on its node
+      - ``hedge``    — the hedge timer for a queued acceleratable request
+        expires
+  * **data-aware placement** — each acceleratable request's payload is
+    placed through :class:`repro.core.placement.StoragePool` (deterministic
+    hash spread over ``Acceleratable_Storage`` drives) and the request is
+    dispatched to the DSCS drive that *holds* its object, never a uniform
+    random draw.  Each drive runs a FCFS, run-to-completion queue (no DSA
+    multi-tenancy, §V) with queue-depth telemetry.
+  * **real hedged dispatch** — if an acceleratable request is still queued
+    ``hedge_budget_s`` after arrival, a second copy is issued on the
+    least-loaded CPU node.  Both copies race; the first finisher wins and
+    the loser is cancelled: a still-queued loser is removed from its queue
+    (consumes no service), while an already-running loser runs to
+    completion occupying its node (run-to-completion — no preemption) and
+    its result is discarded.  ``RequestResult`` records ``hedged``,
+    ``winner`` and both finish times so tail-latency attribution (Fig. 16)
+    is observable.
+
+Every stochastic choice — pipeline sampling, service-time tails (drawn by
+quantile inversion through ``LatencyModel.e2e(q=u)``) and the arrival
+stream — derives from the single engine seed, so a run is exactly
+reproducible and two engines with equal seeds emit identical
+``RequestResult`` streams.
+"""
+from __future__ import annotations
+
+import heapq
+import math
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.arrivals import ArrivalProcess
+from repro.core.function import Pipeline
+from repro.core.latency import LatencyModel, _erfinv
+from repro.core.placement import StoragePool
+from repro.core.platforms import PLATFORMS
+
+
+@dataclass
+class Telemetry:
+    """Prometheus-analogue counters (shared with the scheduler façade)."""
+    counters: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
+
+    def inc(self, name: str, v: float = 1.0) -> None:
+        self.counters[name] += v
+
+    def get(self, name: str) -> float:
+        return self.counters[name]
+
+
+class _ServiceCache:
+    """Closed-form service-time sampler.
+
+    ``LatencyModel.pipeline_breakdown`` at quantile ``q`` decomposes as
+    ``A + R*Tr(q) + W*Tw(q)`` — a deterministic part plus the summed
+    network-read/-write bases scaled by their shared lognormal quantile
+    multipliers.  Solving that 3x3 system once per (workload, platform)
+    turns every per-request draw into two ``exp`` calls instead of a full
+    breakdown (~400x faster), which is what makes the throughput binary
+    search affordable at fleet scale.
+
+    Modeling note: a single uniform draw ``u`` drives every tail multiplier
+    of a request comonotonically (all reads and writes are slow together),
+    whereas the pre-engine scheduler sampled each network component
+    independently.  The comonotone total has a somewhat fatter tail than
+    the independent sum, so absolute p99/SLA numbers shift slightly versus
+    the seed model; within-experiment comparisons (hedging on/off, arrival
+    shapes, fleet ratios) are unaffected.
+    """
+
+    def __init__(self, lm: LatencyModel):
+        self.lm = lm
+        self._coef: Dict[tuple, np.ndarray] = {}
+
+    def _tails(self, q: float) -> tuple:
+        z = math.sqrt(2.0) * _erfinv(2.0 * q - 1.0)
+        return (math.exp(self.lm.params.read_sigma * z),
+                math.exp(self.lm.params.write_sigma * z))
+
+    def __call__(self, pipe: Pipeline, platform: str, u: float) -> float:
+        # service time depends only on (workload, platform); Workload is a
+        # frozen dataclass, so this key is stable (unlike id()) and shared
+        # across pipeline variants of the same workload
+        key = (pipe.workload, platform)
+        coef = self._coef.get(key)
+        if coef is None:
+            plat = PLATFORMS[platform]
+            qs = (0.5, 0.84, 0.975)
+            rows = [(1.0,) + self._tails(q) for q in qs]
+            e2e = [self.lm.e2e(plat, pipe.workload, q=q) for q in qs]
+            # lstsq, not solve: with read_sigma == write_sigma the Tr and Tw
+            # columns coincide and the system is rank-2; the minimum-norm
+            # solution still reproduces e2e(q) exactly
+            coef = np.linalg.lstsq(np.array(rows), np.array(e2e),
+                                   rcond=None)[0]
+            self._coef[key] = coef
+        tr, tw = self._tails(u)
+        return float(coef[0] + coef[1] * tr + coef[2] * tw)
+
+
+@dataclass(order=True)
+class _Event:
+    time: float
+    seq: int
+    kind: str = field(compare=False)
+    payload: object = field(compare=False, default=None)
+
+
+@dataclass
+class RequestResult:
+    """One completed request.  ``finish``/``accelerated`` describe the
+    winning copy; for hedged requests both per-path finish times are kept
+    (the loser's is back-filled when its run-to-completion copy drains, and
+    stays ``None`` if it was cancelled while still queued)."""
+    arrival: float
+    finish: float
+    accelerated: bool
+    hedged: bool = False
+    winner: str = ""                    # "dscs" | "cpu"
+    drive: int = -1                     # serving DSCS drive index, -1 = CPU
+    start: float = 0.0                  # winning copy's service start
+    service: float = 0.0                # winning copy's service duration
+    dscs_finish: Optional[float] = None
+    cpu_finish: Optional[float] = None
+
+    @property
+    def latency(self) -> float:
+        return self.finish - self.arrival
+
+    @property
+    def queue_wait(self) -> float:
+        return self.start - self.arrival
+
+
+class _Copy:
+    """One issued execution path of a request (DSCS or CPU)."""
+    __slots__ = ("req", "path", "node", "state", "start", "service")
+
+    def __init__(self, req: "_Req", path: str, node: int):
+        self.req = req
+        self.path = path                # "dscs" | "cpu"
+        self.node = node
+        self.state = "queued"           # queued | running | done | cancelled
+        self.start = 0.0
+        self.service = 0.0
+
+
+class _Req:
+    __slots__ = ("rid", "arrival", "pipe", "accel", "drive", "copies",
+                 "hedged", "result")
+
+    def __init__(self, rid: int, arrival: float, pipe: Pipeline):
+        self.rid = rid
+        self.arrival = arrival
+        self.pipe = pipe
+        self.accel = False
+        self.drive = -1
+        self.copies: Dict[str, _Copy] = {}
+        self.hedged = False
+        self.result: Optional[RequestResult] = None
+
+
+class _Server:
+    """Single-server FCFS queue with time-weighted depth accounting."""
+    __slots__ = ("queue", "running", "depth_area", "max_depth", "_last_t")
+
+    def __init__(self):
+        self.queue: List[_Copy] = []
+        self.running: Optional[_Copy] = None
+        self.depth_area = 0.0           # integral of queue depth over time
+        self.max_depth = 0
+        self._last_t = 0.0
+
+    def _account(self, t: float) -> None:
+        self.depth_area += len(self.queue) * (t - self._last_t)
+        self._last_t = t
+
+    def push(self, copy: _Copy, t: float) -> None:
+        self._account(t)
+        self.queue.append(copy)
+        self.max_depth = max(self.max_depth, len(self.queue))
+
+    def cancel_queued(self, copy: _Copy, t: float) -> None:
+        self._account(t)
+        self.queue.remove(copy)
+
+    def pop(self, t: float) -> Optional[_Copy]:
+        if self.running is not None or not self.queue:
+            return None
+        self._account(t)
+        return self.queue.pop(0)
+
+    @property
+    def load(self) -> int:
+        return len(self.queue) + (1 if self.running is not None else 0)
+
+
+class ClusterEngine:
+    """The discrete-event fleet: ``n_dscs`` DSCS drives with per-drive FCFS
+    queues + ``n_cpu`` CPU fallback nodes, fed by an arrival process."""
+
+    def __init__(self, *, n_dscs: int, n_cpu: int,
+                 latency_model: Optional[LatencyModel] = None,
+                 hedge_budget_s: Optional[float] = None, seed: int = 0,
+                 n_plain: int = 64,
+                 telemetry: Optional[Telemetry] = None):
+        if n_cpu <= 0:
+            raise ValueError("the fleet needs at least one CPU fallback node")
+        self.n_dscs = n_dscs
+        self.n_cpu = n_cpu
+        self.n_plain = n_plain
+        self.lm = latency_model or LatencyModel(seed=seed)
+        self.hedge_budget_s = hedge_budget_s
+        self.seed = seed
+        self.telemetry = telemetry if telemetry is not None else Telemetry()
+        self.drives: List[_Server] = []
+        self.cpus: List[_Server] = []
+        self._svc_cache = _ServiceCache(self.lm)
+
+    # -- service-time draws --------------------------------------------------
+    def _service(self, pipe: Pipeline, platform: str,
+                 rng: np.random.Generator) -> float:
+        """Sample a service time by quantile inversion: a uniform draw from
+        the engine's own rng is fed to the deterministic quantile path of
+        the latency model (via the cached decomposition), so samples never
+        touch ``LatencyModel.rng`` and the run is reproducible from the
+        engine seed alone."""
+        u = float(np.clip(rng.uniform(), 1e-4, 1.0 - 1e-4))
+        return self._svc_cache(pipe, platform, u)
+
+    # -- main loop -----------------------------------------------------------
+    def run(self, pipelines: List[Pipeline], *, arrivals: ArrivalProcess,
+            duration_s: float) -> List[RequestResult]:
+        """Simulate ``duration_s`` of offered load and drain every request;
+        returns one ``RequestResult`` per arrival, in arrival order."""
+        ss = np.random.SeedSequence(self.seed)
+        arr_rng, rng = (np.random.default_rng(s) for s in ss.spawn(2))
+        pool = StoragePool(n_plain=self.n_plain, n_dscs=self.n_dscs)
+        drive_idx = {d.drive_id: i for i, d in enumerate(pool.dscs_drives())}
+        self.drives = [_Server() for _ in range(self.n_dscs)]
+        self.cpus = [_Server() for _ in range(self.n_cpu)]
+
+        heap: List[_Event] = []
+        seq = 0
+
+        def push(t: float, kind: str, payload) -> None:
+            nonlocal seq
+            seq += 1
+            heapq.heappush(heap, _Event(t, seq, kind, payload))
+
+        times = arrivals.times(duration_s, arr_rng)
+        reqs: List[_Req] = []
+        for rid, t in enumerate(map(float, times)):
+            pipe = pipelines[int(rng.integers(len(pipelines)))]
+            reqs.append(_Req(rid, t, pipe))
+            push(t, "arrival", reqs[-1])
+
+        while heap:
+            ev = heapq.heappop(heap)
+            if ev.kind == "arrival":
+                self._on_arrival(ev.payload, ev.time, pool, drive_idx,
+                                 rng, push)
+            elif ev.kind == "hedge":
+                self._on_hedge(ev.payload, ev.time, rng, push)
+            else:                       # finish
+                self._on_finish(ev.payload, ev.time, rng, push)
+
+        return [r.result for r in reqs]
+
+    # -- event handlers ------------------------------------------------------
+    def _on_arrival(self, req: _Req, t: float, pool: StoragePool,
+                    drive_idx: Dict[int, int], rng, push) -> None:
+        req.accel = (self.n_dscs > 0
+                     and all(f.acceleratable for f in req.pipe.functions[:2]))
+        if req.accel:
+            # data-aware placement: the payload is written to an
+            # Acceleratable_Storage drive at arrival; the request is then
+            # dispatched to the drive that holds it.
+            drive = pool.place(f"req-{req.rid}", req.pipe.workload.request_bytes,
+                               "Acceleratable_Storage")
+            req.drive = drive_idx[drive.drive_id]
+            copy = _Copy(req, "dscs", req.drive)
+            req.copies["dscs"] = copy
+            self.drives[req.drive].push(copy, t)
+            self.telemetry.inc("dscs_dispatch")
+            if self.hedge_budget_s is not None:
+                push(t + self.hedge_budget_s, "hedge", req)
+            self._maybe_start(self.drives[req.drive], t, rng, push)
+        else:
+            self._issue_cpu(req, t, rng, push)
+            self.telemetry.inc("cpu_dispatch")
+
+    def _issue_cpu(self, req: _Req, t: float, rng, push) -> None:
+        node = min(range(self.n_cpu), key=lambda i: (self.cpus[i].load, i))
+        copy = _Copy(req, "cpu", node)
+        req.copies["cpu"] = copy
+        self.cpus[node].push(copy, t)
+        self._maybe_start(self.cpus[node], t, rng, push)
+
+    def _on_hedge(self, req: _Req, t: float, rng, push) -> None:
+        dscs = req.copies.get("dscs")
+        if dscs is None or dscs.state != "queued" or req.result is not None:
+            return                      # started or finished in time: no hedge
+        req.hedged = True
+        self.telemetry.inc("hedge_issued")
+        self.telemetry.inc("dscs_fallback")   # budget blown -> CPU path opens
+        self._issue_cpu(req, t, rng, push)
+
+    def _on_finish(self, copy: _Copy, t: float, rng, push) -> None:
+        server = (self.drives if copy.path == "dscs" else self.cpus)[copy.node]
+        server.running = None
+        req = copy.req
+        if copy.state == "cancelled":
+            # run-to-completion loser draining; back-fill its finish time
+            if req.result is not None:
+                self._record_path_finish(req.result, copy.path, t)
+        else:
+            copy.state = "done"
+            if req.result is None:
+                self._record_win(req, copy, t)
+            self._record_path_finish(req.result, copy.path, t)
+        self._maybe_start(server, t, rng, push)
+
+    def _record_win(self, req: _Req, copy: _Copy, t: float) -> None:
+        req.result = RequestResult(
+            arrival=req.arrival, finish=t, accelerated=copy.path == "dscs",
+            hedged=req.hedged, winner=copy.path,
+            drive=req.drive if copy.path == "dscs" else -1,
+            start=copy.start, service=copy.service)
+        self.telemetry.inc(f"hedge_won_{copy.path}" if req.hedged
+                           else f"{copy.path}_served")
+        loser = req.copies.get("cpu" if copy.path == "dscs" else "dscs")
+        if loser is None or loser.state in ("done", "cancelled"):
+            return
+        if loser.state == "queued":
+            lsrv = (self.drives if loser.path == "dscs"
+                    else self.cpus)[loser.node]
+            lsrv.cancel_queued(loser, t)
+            self.telemetry.inc("cancelled_in_queue")
+        else:                           # running: no preemption, drains
+            self.telemetry.inc("cancelled_in_service")
+        loser.state = "cancelled"
+
+    @staticmethod
+    def _record_path_finish(res: Optional[RequestResult], path: str,
+                            t: float) -> None:
+        if res is None:
+            return
+        if path == "dscs" and res.dscs_finish is None:
+            res.dscs_finish = t
+        elif path == "cpu" and res.cpu_finish is None:
+            res.cpu_finish = t
+
+    def _maybe_start(self, server: _Server, t: float, rng, push) -> None:
+        while True:
+            copy = server.pop(t)
+            if copy is None:
+                return
+            if copy.state == "cancelled":   # defensive: cancelled are removed
+                continue
+            copy.state = "running"
+            copy.start = t
+            plat = "DSCS-Serverless" if copy.path == "dscs" else "Baseline-CPU"
+            copy.service = self._service(copy.req.pipe, plat, rng)
+            server.running = copy
+            push(t + copy.service, "finish", copy)
+            return
+
+    # -- telemetry -----------------------------------------------------------
+    def queue_stats(self) -> Dict[str, Dict[str, float]]:
+        """Per-class queue-depth telemetry from the last run."""
+        def summarize(servers: List[_Server]) -> Dict[str, float]:
+            if not servers:
+                return {"max_depth": 0.0, "mean_depth": 0.0}
+            horizon = max((s._last_t for s in servers), default=0.0)
+            mean = (sum(s.depth_area for s in servers)
+                    / (horizon * len(servers))) if horizon > 0 else 0.0
+            return {"max_depth": float(max(s.max_depth for s in servers)),
+                    "mean_depth": float(mean)}
+        return {"dscs": summarize(self.drives), "cpu": summarize(self.cpus)}

@@ -1,66 +1,47 @@
 """Function scheduling, fallback and straggler mitigation (§V, §VI-C).
 
-Event-driven simulator of the extended Kubernetes scheduler:
+Thin façade over the discrete-event engine in :mod:`repro.core.engine`.
+``ClusterSim`` keeps the public surface the figures, examples and tests
+have always used (``run``, ``max_throughput``, ``telemetry``,
+``RequestResult``) while the actual fleet dynamics — per-drive FCFS
+queues, data-aware placement through :class:`StoragePool`, hedged dispatch
+racing the DSCS and CPU paths, and pluggable arrival processes — live in
+the engine's event loop:
+
   * FCFS per node, run-to-completion, no multi-tenancy on a DSA
   * acceleratable functions are dispatched to the DSCS drive that HOLDS the
-    request's data, if its DSA is free — otherwise fall back to the
-    traditional CPU path (the drive still serves reads like a plain drive)
+    request's data (deterministic placement hash), never a random draw
   * Prometheus-style telemetry drives the busy/available decision
-  * hedged dispatch: if a request sits past a latency budget, re-issue on
-    the fallback path and take the earlier finisher (tail/straggler
+  * hedged dispatch: if a request is still queued past ``hedge_budget_s``,
+    a second copy is issued on the least-loaded CPU node, both copies race,
+    the earlier finisher wins and the loser is cancelled (tail/straggler
     mitigation — our addition, evaluated in fig16)
+
+Every run is reproducible from the constructor seed: repeated ``run``
+calls on one ``ClusterSim`` (and two sims built with equal seeds) produce
+identical ``RequestResult`` streams.
 """
 from __future__ import annotations
 
-import heapq
 import math
-from collections import defaultdict
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import List, Optional
 
 import numpy as np
 
+from repro.core.arrivals import ArrivalProcess, PoissonProcess
+from repro.core.engine import (ClusterEngine, RequestResult,  # noqa: F401
+                               Telemetry)
 from repro.core.function import Pipeline
 from repro.core.latency import LatencyModel
 from repro.core.placement import StoragePool
-from repro.core.platforms import PLATFORMS, Platform
 
-
-@dataclass
-class Telemetry:
-    """Prometheus-analogue counters."""
-    counters: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
-
-    def inc(self, name: str, v: float = 1.0) -> None:
-        self.counters[name] += v
-
-    def get(self, name: str) -> float:
-        return self.counters[name]
-
-
-@dataclass(order=True)
-class _Event:
-    time: float
-    seq: int
-    kind: str = field(compare=False)
-    payload: dict = field(compare=False, default_factory=dict)
-
-
-@dataclass
-class RequestResult:
-    arrival: float
-    finish: float
-    accelerated: bool
-    hedged: bool = False
-
-    @property
-    def latency(self) -> float:
-        return self.finish - self.arrival
+__all__ = ["ClusterSim", "RequestResult", "Telemetry"]
 
 
 class ClusterSim:
     """Simulates a fleet: N DSCS drives + M CPU fallback nodes serving a
-    Poisson request stream of Table I pipelines."""
+    request stream of Table I pipelines (Poisson by default; any
+    :class:`ArrivalProcess` via ``arrivals=``)."""
 
     def __init__(self, *, n_dscs: int = 100, n_cpu: int = 100,
                  latency_model: Optional[LatencyModel] = None,
@@ -70,60 +51,53 @@ class ClusterSim:
         self.n_dscs = n_dscs
         self.n_cpu = n_cpu
         self.hedge_budget_s = hedge_budget_s
-        self.rng = np.random.default_rng(seed)
+        self.seed = seed
         self.telemetry = Telemetry()
+        self.engine = ClusterEngine(
+            n_dscs=n_dscs, n_cpu=n_cpu, latency_model=self.lm,
+            hedge_budget_s=hedge_budget_s, seed=seed,
+            telemetry=self.telemetry)
 
-    # -- service-time draws ----------------------------------------------
-    def _service(self, pipe: Pipeline, plat: Platform) -> float:
-        return self.lm.e2e(plat, pipe.workload, q=None)
+    def run(self, pipelines: List[Pipeline], *, rps: Optional[float] = None,
+            duration_s: float = 120.0,
+            arrivals: Optional[ArrivalProcess] = None) -> List[RequestResult]:
+        """Simulate ``duration_s`` of offered load.
 
-    def run(self, pipelines: List[Pipeline], *, rps: float,
-            duration_s: float = 120.0) -> List[RequestResult]:
-        """Poisson arrivals of randomly-sampled pipelines; FCFS queues."""
-        dsa_free = [0.0] * self.n_dscs      # next-free time per DSA drive
-        cpu_free = [0.0] * self.n_cpu
-        results: List[RequestResult] = []
-        t = 0.0
-        seq = 0
-        while t < duration_s:
-            t += float(self.rng.exponential(1.0 / rps))
-            pipe = pipelines[int(self.rng.integers(len(pipelines)))]
-            seq += 1
-            accel = all(f.acceleratable for f in pipe.functions[:2])
-            if accel:
-                # data-locality: the request's payload lives on one DSCS
-                # drive; dispatch there if free "enough", else fall back
-                d = int(self.rng.integers(self.n_dscs))
-                start = max(t, dsa_free[d])
-                queue_wait = start - t
-                if queue_wait <= (self.hedge_budget_s or math.inf):
-                    svc = self._service(pipe, PLATFORMS["DSCS-Serverless"])
-                    dsa_free[d] = start + svc
-                    results.append(RequestResult(t, start + svc, True))
-                    self.telemetry.inc("dscs_dispatch")
-                    continue
-                self.telemetry.inc("dscs_fallback")
-            # traditional path: least-loaded CPU node
-            c = int(np.argmin(cpu_free))
-            start = max(t, cpu_free[c])
-            svc = self._service(pipe, PLATFORMS["Baseline-CPU"])
-            cpu_free[c] = start + svc
-            results.append(RequestResult(t, start + svc, False,
-                                         hedged=accel))
-            self.telemetry.inc("cpu_dispatch")
-        return results
+        Pass either ``rps`` (Poisson arrivals at that rate — the historical
+        interface) or an explicit ``arrivals`` process.
+        """
+        if arrivals is None:
+            if rps is None:
+                raise ValueError("pass rps= or arrivals=")
+            arrivals = PoissonProcess(rate=rps)
+        elif rps is not None:
+            raise ValueError("pass either rps= or arrivals=, not both "
+                             "(rps would be silently ignored)")
+        return self.engine.run(pipelines, arrivals=arrivals,
+                               duration_s=duration_s)
+
+    def queue_stats(self):
+        """Queue-depth telemetry from the most recent ``run``."""
+        return self.engine.queue_stats()
 
     # -- throughput under SLA (Fig. 12 methodology) ------------------------
     def max_throughput(self, pipelines: List[Pipeline], *, sla_s: float,
                        sla_frac: float = 0.99, duration_s: float = 60.0,
-                       lo: float = 1.0, hi: float = 4096.0) -> float:
-        """Binary-search the highest Poisson RPS meeting the SLA."""
+                       lo: float = 1.0, hi: float = 4096.0,
+                       arrivals: Optional[ArrivalProcess] = None) -> float:
+        """Binary-search the highest mean RPS meeting the SLA.  ``arrivals``
+        selects the load *shape*; its rate is rescaled at every probe (so
+        trace replay, which has no free rate, is rejected)."""
+        proto = arrivals if arrivals is not None else PoissonProcess(rate=1.0)
+
         def ok(rps: float) -> bool:
-            res = self.run(pipelines, rps=rps, duration_s=duration_s)
+            res = self.run(pipelines, duration_s=duration_s,
+                           arrivals=proto.with_rate(rps))
             if not res:
                 return True
             lat = np.array([r.latency for r in res])
             return float(np.mean(lat <= sla_s)) >= sla_frac
+
         for _ in range(12):
             mid = math.sqrt(lo * hi)
             if ok(mid):

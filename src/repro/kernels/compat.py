@@ -1,0 +1,20 @@
+"""Version-compat shims for jax's Pallas TPU API.
+
+jax renamed ``TPUCompilerParams`` to ``CompilerParams`` across releases;
+every kernel routes through this helper so the next rename is one edit.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+_CLS = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams", None)
+
+
+def compiler_params(**kwargs):
+    """Build the pallas-TPU compiler-params object for this jax version."""
+    if _CLS is None:
+        raise ImportError(
+            "jax.experimental.pallas.tpu exposes neither CompilerParams nor "
+            "TPUCompilerParams; this jax version is unsupported")
+    return _CLS(**kwargs)

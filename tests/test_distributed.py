@@ -75,6 +75,7 @@ def test_checkpoint_roundtrip_and_retention(tmp_path):
     assert len(kept) == 2
 
 
+@pytest.mark.slow
 def test_train_crash_restart_resumes_identically(tmp_path):
     """Fault tolerance: train 8 steps straight vs 4 + 'crash' + resume 4 —
     identical final loss (deterministic data stream + checkpointed state)."""
@@ -91,6 +92,7 @@ def test_train_crash_restart_resumes_identically(tmp_path):
     assert abs(l_straight[-1] - l_part2[-1]) < 1e-4
 
 
+@pytest.mark.slow
 def test_grad_accumulation_matches_large_batch():
     from repro.launch.train import train
     import tempfile
@@ -111,8 +113,9 @@ _EP_SCRIPT = textwrap.dedent("""
     from jax.sharding import PartitionSpec as P
     from repro.models.layers import moe_ffn
     from repro.distributed.moe_ep import moe_ffn_ep
+    _at = getattr(jax.sharding, "AxisType", None)
     mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+                         **({"axis_types": (_at.Auto,) * 2} if _at else {}))
     key = jax.random.PRNGKey(0)
     B, S, D, E, F, K = 4, 8, 16, 8, 32, 2
     ks = jax.random.split(key, 5)
@@ -135,6 +138,7 @@ _EP_SCRIPT = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow
 def test_moe_ep_matches_gather_path_on_8dev_mesh():
     """Expert-parallel shard_map MoE == single-device gather MoE (run in a
     subprocess so the 8-device host platform doesn't leak into this one)."""

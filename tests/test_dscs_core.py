@@ -157,6 +157,7 @@ def test_scheduler_accelerates_and_falls_back():
     assert accel and fallb
 
 
+@pytest.mark.slow
 def test_scheduler_throughput_dscs_beats_cpu():
     pipes = [standard_pipeline("content_moderation")]
     pipes_cpu = [standard_pipeline("content_moderation", accelerate=False)]
@@ -183,6 +184,7 @@ def test_placement_spreads_requests():
     assert len(drives) == 8               # independent requests spread out
 
 
+@pytest.mark.slow
 def test_executor_runs_all_workloads():
     import jax
     key = jax.random.PRNGKey(0)

@@ -1,0 +1,234 @@
+"""Discrete-event cluster engine: invariants, determinism, hedging,
+data-aware placement and the arrival-process library."""
+import numpy as np
+import pytest
+
+from repro.core.arrivals import (BurstyOnOff, DiurnalProcess, PoissonProcess,
+                                 TraceReplay, make_arrivals)
+from repro.core.function import standard_pipeline
+from repro.core.placement import StoragePool
+from repro.core.scheduler import ClusterSim
+
+PIPES = [standard_pipeline(n) for n in ("asset_damage", "content_moderation")]
+
+
+def _overloaded_sim(seed=0, hedge=0.05):
+    return ClusterSim(n_dscs=4, n_cpu=8, hedge_budget_s=hedge, seed=seed)
+
+
+# --------------------------------------------------------------------------
+# engine invariants
+# --------------------------------------------------------------------------
+
+def test_every_arrival_produces_exactly_one_result():
+    sim = _overloaded_sim()
+    arr = PoissonProcess(rate=80.0)
+    n_arrivals = len(arr.times(10.0, np.random.default_rng(
+        np.random.SeedSequence(0).spawn(2)[0])))
+    res = sim.run(PIPES, arrivals=arr, duration_s=10)
+    assert len(res) == n_arrivals
+    assert all(r is not None for r in res)
+
+
+def test_time_ordering_invariants():
+    res = _overloaded_sim().run(PIPES, rps=100, duration_s=10)
+    for r in res:
+        assert r.start >= r.arrival - 1e-9
+        assert r.service > 0.0
+        assert r.finish >= r.arrival + r.service - 1e-9
+        assert abs(r.finish - (r.start + r.service)) < 1e-9
+
+
+def test_fcfs_order_per_drive():
+    """DSCS-served requests on one drive must start in arrival order."""
+    res = _overloaded_sim().run(PIPES, rps=100, duration_s=10)
+    by_drive = {}
+    for r in res:
+        if r.winner == "dscs":
+            by_drive.setdefault(r.drive, []).append(r)
+    assert by_drive
+    for drive, rs in by_drive.items():
+        rs.sort(key=lambda r: r.arrival)
+        starts = [r.start for r in rs]
+        assert starts == sorted(starts), f"drive {drive} broke FCFS"
+
+
+def test_hedged_winner_latency_le_both_paths():
+    res = _overloaded_sim().run(PIPES, rps=150, duration_s=10)
+    hedged = [r for r in res if r.hedged]
+    assert hedged, "overloaded scenario must hedge"
+    both = [r for r in hedged
+            if r.dscs_finish is not None and r.cpu_finish is not None]
+    assert both, "some hedges must race to completion on both paths"
+    for r in both:
+        assert r.finish <= min(r.dscs_finish, r.cpu_finish) + 1e-9
+    # winner attribution is coherent
+    for r in hedged:
+        assert r.winner in ("dscs", "cpu")
+        assert r.accelerated == (r.winner == "dscs")
+
+
+def test_hedging_observable_and_telemetry_consistent():
+    sim = _overloaded_sim()
+    res = sim.run(PIPES, rps=150, duration_s=10)
+    tel = sim.telemetry
+    assert tel.get("dscs_dispatch") > 0
+    assert tel.get("hedge_issued") > 0
+    assert tel.get("hedge_issued") == tel.get("dscs_fallback")
+    assert (tel.get("hedge_won_dscs") + tel.get("hedge_won_cpu")
+            == sum(r.hedged for r in res))
+    q = sim.queue_stats()
+    assert q["dscs"]["max_depth"] >= q["dscs"]["mean_depth"] >= 0.0
+
+
+def test_no_dscs_fleet_serves_everything_on_cpu():
+    res = ClusterSim(n_dscs=0, n_cpu=8, seed=0).run(PIPES, rps=30,
+                                                    duration_s=5)
+    assert res and all(not r.accelerated and r.winner == "cpu" for r in res)
+
+
+def test_data_aware_placement_matches_storage_pool_hash():
+    """The engine must dispatch to the drive the placement hash selects,
+    not a random draw."""
+    sim = ClusterSim(n_dscs=8, n_cpu=8, seed=0)
+    res = sim.run([standard_pipeline("asset_damage")], rps=40, duration_s=5)
+    pool = StoragePool(n_plain=64, n_dscs=8)
+    idx = {d.drive_id: i for i, d in enumerate(pool.dscs_drives())}
+    for rid, r in enumerate(res):
+        if r.winner != "dscs":
+            continue
+        want = idx[pool.place(f"req-{rid}", 1, "Acceleratable_Storage")
+                   .drive_id]
+        assert r.drive == want
+
+
+# --------------------------------------------------------------------------
+# seeded reproducibility
+# --------------------------------------------------------------------------
+
+def test_golden_trace_identical_across_runs():
+    """Two sims with one seed emit identical RequestResult streams; the
+    same sim re-run also replays exactly."""
+    a_sim = _overloaded_sim(seed=13)
+    a = a_sim.run(PIPES, rps=60, duration_s=8)
+    b = _overloaded_sim(seed=13).run(PIPES, rps=60, duration_s=8)
+    assert len(a) == len(b) > 0
+    assert a == b
+    assert a_sim.run(PIPES, rps=60, duration_s=8) == a
+
+
+def test_different_seeds_differ():
+    a = _overloaded_sim(seed=0).run(PIPES, rps=60, duration_s=8)
+    b = _overloaded_sim(seed=1).run(PIPES, rps=60, duration_s=8)
+    assert a != b
+
+
+def test_bursty_golden_trace():
+    arr = BurstyOnOff(rate=50.0)
+    a = _overloaded_sim(seed=3).run(PIPES, arrivals=arr, duration_s=8)
+    b = _overloaded_sim(seed=3).run(PIPES, arrivals=arr, duration_s=8)
+    assert a == b and len(a) > 0
+
+
+# --------------------------------------------------------------------------
+# straggler mitigation (Fig. 16 claim, acceptance criterion)
+# --------------------------------------------------------------------------
+
+def test_hedging_lowers_p99_under_bursty_load():
+    pipes = [standard_pipeline("content_moderation")]
+    arr = BurstyOnOff(rate=120.0, burst_factor=5.0, mean_on_s=1.0,
+                      mean_off_s=4.0)
+    off = ClusterSim(n_dscs=6, n_cpu=24, hedge_budget_s=None, seed=0).run(
+        pipes, arrivals=arr, duration_s=30)
+    on = ClusterSim(n_dscs=6, n_cpu=24, hedge_budget_s=0.1, seed=0).run(
+        pipes, arrivals=arr, duration_s=30)
+    assert sum(r.hedged for r in on) > 0
+    p99_off = float(np.percentile([r.latency for r in off], 99))
+    p99_on = float(np.percentile([r.latency for r in on], 99))
+    assert p99_on < p99_off
+
+
+# --------------------------------------------------------------------------
+# service-time cache
+# --------------------------------------------------------------------------
+
+def test_service_cache_survives_equal_sigmas():
+    """read_sigma == write_sigma makes the tail columns collinear; the
+    decomposition must fall back gracefully, not crash."""
+    from repro.core.latency import LatencyModel, LatencyParams
+    lm = LatencyModel(params=LatencyParams(read_sigma=0.4, write_sigma=0.4))
+    res = ClusterSim(n_dscs=2, n_cpu=4, latency_model=lm, seed=0).run(
+        PIPES, rps=20, duration_s=3)
+    assert res and all(r.service > 0 for r in res)
+
+
+def test_service_cache_keyed_by_workload_not_object_identity():
+    """Freshly-constructed Pipeline objects (recycled ids) must hit the
+    right cached coefficients: same workload -> same draw sequence."""
+    sim = ClusterSim(n_dscs=2, n_cpu=4, seed=5)
+    a = sim.run([standard_pipeline("asset_damage")], rps=30, duration_s=3)
+    for _ in range(50):                  # churn allocator to recycle ids
+        sim.run([standard_pipeline("content_moderation")], rps=30,
+                duration_s=1)
+    b = sim.run([standard_pipeline("asset_damage")], rps=30, duration_s=3)
+    assert a == b
+
+
+# --------------------------------------------------------------------------
+# arrival processes
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("proc,horizon", [
+    (PoissonProcess(200.0), 60.0),
+    # one ON/OFF cycle averages 10 s, so the MMPP needs a much longer
+    # window before its sample mean settles near the nominal rate
+    (BurstyOnOff(200.0), 600.0),
+    (DiurnalProcess(200.0), 60.0),
+])
+def test_arrivals_sorted_deterministic_and_rate_calibrated(proc, horizon):
+    rng = np.random.default_rng(0)
+    ts = proc.times(horizon, rng)
+    assert np.all(np.diff(ts) >= 0.0)
+    assert np.all((ts >= 0.0) & (ts < horizon))
+    # same seed replays, different seed does not
+    assert np.array_equal(ts, proc.times(horizon, np.random.default_rng(0)))
+    assert not np.array_equal(ts, proc.times(horizon,
+                                             np.random.default_rng(1)))
+    # long-run mean rate within 20% of nominal
+    assert 0.8 * 200 * horizon < ts.size < 1.2 * 200 * horizon
+
+
+def test_trace_replay_exact_and_unscalable():
+    trace = (0.5, 0.1, 3.0, 99.0)
+    proc = TraceReplay(rate=0.0, trace=trace)
+    ts = proc.times(10.0, np.random.default_rng(0))
+    assert ts.tolist() == [0.1, 0.5, 3.0]
+    with pytest.raises(TypeError):
+        proc.with_rate(5.0)
+
+
+def test_with_rate_returns_rescaled_copy():
+    p = BurstyOnOff(100.0, burst_factor=3.0)
+    q = p.with_rate(10.0)
+    assert q.rate == 10.0 and q.burst_factor == 3.0
+    assert p.rate == 100.0
+
+
+def test_make_arrivals_factory():
+    assert isinstance(make_arrivals("poisson", 5.0), PoissonProcess)
+    assert isinstance(make_arrivals("bursty", 5.0), BurstyOnOff)
+    with pytest.raises(ValueError):
+        make_arrivals("fractal", 5.0)
+
+
+def test_ambiguous_load_spec_rejected():
+    with pytest.raises(ValueError):
+        ClusterSim(n_dscs=2, n_cpu=2).run(PIPES, rps=200,
+                                          arrivals=PoissonProcess(5.0),
+                                          duration_s=1)
+
+
+def test_bursty_degenerate_phases_rejected():
+    with pytest.raises(ValueError):
+        BurstyOnOff(100.0, mean_off_s=0.0).times(1.0,
+                                                 np.random.default_rng(0))

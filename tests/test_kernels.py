@@ -89,6 +89,7 @@ def test_vector_engine_quant_roundtrip():
 
 
 @pytest.mark.parametrize("b,s,w", [(2, 64, 128), (4, 128, 256), (1, 32, 128)])
+@pytest.mark.slow
 def test_rglru_kernel(b, s, w):
     ks = jax.random.split(KEY, 4)
     x = jax.random.normal(ks[0], (b, s, w)) * 0.2
@@ -105,6 +106,7 @@ def test_rglru_kernel(b, s, w):
 @pytest.mark.parametrize("b,s,h,p,g,n,chunk", [
     (2, 128, 4, 32, 2, 16, 32), (1, 256, 2, 16, 1, 8, 64),
     (2, 64, 4, 16, 4, 16, 64)])
+@pytest.mark.slow
 def test_ssd_kernel(b, s, h, p, g, n, chunk):
     ks = jax.random.split(KEY, 5)
     x = jax.random.normal(ks[0], (b, s, h, p)) * 0.4

@@ -26,6 +26,7 @@ def _inputs(cfg, key, B=2, S=32):
 
 
 @pytest.mark.parametrize("arch", ARCH_NAMES)
+@pytest.mark.slow
 def test_smoke_forward_train_step(arch):
     """Reduced config: one forward + grad step on CPU; shapes + no NaNs."""
     cfg = get_arch(arch).reduced()
@@ -57,6 +58,7 @@ def test_prefill_matches_forward(arch):
 
 
 @pytest.mark.parametrize("arch", ARCH_NAMES)
+@pytest.mark.slow
 def test_decode_matches_forward(arch):
     """decode_step at position S must equal forward on S+1 tokens."""
     cfg = get_arch(arch).reduced()
@@ -92,6 +94,7 @@ def _grow(cfg, cache, B, cap):
     return new
 
 
+@pytest.mark.slow
 def test_sliding_window_ring_cache_equivalence():
     """Hybrid arch: ring-buffer decode == full-cache decode for in-window
     positions."""
@@ -122,6 +125,7 @@ def test_moe_routes_tokens_and_balances():
     assert float(jnp.max(jnp.abs(l1 - l2))) > 1e-4
 
 
+@pytest.mark.slow
 def test_vision_models_shapes():
     from repro.models import vision
     key = jax.random.PRNGKey(5)

@@ -1,8 +1,15 @@
-"""Hypothesis property-based tests on system invariants."""
+"""Hypothesis property-based tests on system invariants.
+
+The whole module is skipped (not an error) when hypothesis is absent —
+``requirements-dev.txt`` installs it for the full suite.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.dsa import DSAConfig, GemmShape, gemm_cycles, network_flops
 from repro.core.latency import LatencyModel

@@ -53,6 +53,57 @@ def test_batcher_mixed_lengths_free_slots_early():
     assert b.steps < 25
 
 
+def test_batcher_fifo_admission_order():
+    """Free slots must be granted in submission (FIFO) order."""
+    pre, dec = _toy_engine()
+    admitted = []
+
+    def tracking_prefill(slot, prompt):
+        admitted.append(int(prompt[-1]))
+        return pre(slot, prompt)
+
+    b = ContinuousBatcher(2, tracking_prefill, dec)
+    for i in range(8):
+        b.submit(Request(rid=i, prompt=np.array([i], np.int32), max_new=3))
+    b.run_until_drained()
+    assert admitted == sorted(admitted) == list(range(8))
+
+
+def test_batcher_slot_reuse_after_completion():
+    """With 1 slot and N requests, the slot must be reused N times and
+    hold at most one live request at a time."""
+    pre, dec = _toy_engine()
+    b = ContinuousBatcher(1, pre, dec)
+    for i in range(5):
+        b.submit(Request(rid=i, prompt=np.array([i], np.int32), max_new=2))
+    while b.queue or b.live:
+        assert len(b.live) <= 1
+        b.step()
+    assert b.stats["completed"] == 5
+    assert b.stats["admitted"] == 5
+
+
+def test_batcher_slot_utilization_bounds():
+    pre, dec = _toy_engine()
+    b = ContinuousBatcher(4, pre, dec)
+    assert b.slot_utilization == 0.0          # no decode steps yet
+    for i in range(3):                        # fewer requests than slots
+        b.submit(Request(rid=i, prompt=np.array([0], np.int32), max_new=4))
+    b.run_until_drained()
+    assert 0.0 <= b.slot_utilization <= 1.0
+    assert b.slot_utilization <= 3.0 / 4.0 + 1e-9   # 1 slot always idle
+
+
+def test_batcher_drain_terminates_under_max_steps():
+    """run_until_drained must stop at max_steps even with work left."""
+    pre, dec = _toy_engine()
+    b = ContinuousBatcher(1, pre, dec)
+    b.submit(Request(rid=0, prompt=np.array([0], np.int32), max_new=10_000))
+    b.run_until_drained(max_steps=7)
+    assert b.steps == 7
+    assert b.stats["completed"] == 0 and b.live   # still in flight, no hang
+
+
 def test_paper_suite_configs_build():
     import jax
     from repro.configs.paper_suite import PAPER_LM_SUITE

@@ -8,6 +8,7 @@ import numpy as np
 import pytest
 
 
+@pytest.mark.slow
 def test_training_reduces_loss(tmp_path):
     """~100M-class family member (reduced) trains: loss must drop."""
     from repro.launch.train import train
@@ -16,6 +17,7 @@ def test_training_reduces_loss(tmp_path):
     assert losses[-1] < losses[0] - 0.3
 
 
+@pytest.mark.slow
 def test_serving_generates(tmp_path):
     from repro.launch.serve import serve
     out = serve("qwen1.5-4b", smoke=True, batch=2, prompt=16, gen=4)
@@ -23,12 +25,14 @@ def test_serving_generates(tmp_path):
     assert out["generated"].dtype == np.int32
 
 
+@pytest.mark.slow
 def test_serving_ssm_generates():
     from repro.launch.serve import serve
     out = serve("mamba2-370m", smoke=True, batch=2, prompt=16, gen=4)
     assert out["generated"].shape == (2, 4)
 
 
+@pytest.mark.slow
 def test_dscs_pipeline_end_to_end():
     """The paper's Fig. 2 flow executes numerically with kernels engaged."""
     from repro.core.executor import DSCSExecutor
