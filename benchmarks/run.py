@@ -1,14 +1,17 @@
 """Benchmark harness: one function per paper table/figure, plus kernel
 micro-benchmarks and the roofline summary.  Prints ``name,us_per_call,
-derived`` CSV (for analytic figures the middle column is the metric value).
+derived`` CSV (for analytic figures the middle column is the metric value),
+or a JSON array of ``{name, value, derived}`` rows with ``--json``.
 
     python -m benchmarks.run                  # everything
     python -m benchmarks.run --only fig19     # one figure family
     python -m benchmarks.run --list           # enumerate figures
+    python -m benchmarks.run --only fig12 --json   # machine-readable rows
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -86,6 +89,8 @@ def main(argv=None) -> None:
                     help="run only figures whose name contains this")
     ap.add_argument("--list", action="store_true", dest="list_figs",
                     help="print figure names and exit")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="emit a JSON array of rows instead of CSV")
     args = ap.parse_args(argv)
     figures = [f for f in ALL_FIGURES
                if args.only.lower() in f.__name__.lower()]
@@ -93,21 +98,34 @@ def main(argv=None) -> None:
         for fig in figures:
             print(fig.__name__)
         return
-    print("name,us_per_call,derived")
+
+    collected = []
+
+    def emit(name, val, derived):
+        if args.as_json:
+            collected.append({"name": name, "value": float(val),
+                              "derived": str(derived)})
+        else:
+            print(f"{name},{val:.6g},{derived}")
+            sys.stdout.flush()
+
+    if not args.as_json:
+        print("name,us_per_call,derived")
     for fig in figures:
         t0 = time.perf_counter()
         rows = fig()
         dt = (time.perf_counter() - t0) * 1e6
         for name, val, derived in rows:
-            print(f"{name},{val:.6g},{derived}")
-        print(f"{fig.__name__}/wall,{dt:.1f},us")
-        sys.stdout.flush()
-    if args.only:
-        return
-    for name, us, derived in _kernel_micro():
-        print(f"{name},{us:.1f},{derived}")
-    for name, val, derived in _roofline_summary():
-        print(f"{name},{val:.6g},{derived}")
+            emit(name, val, derived)
+        emit(f"{fig.__name__}/wall", dt, "us")
+    if not args.only:
+        for name, us, derived in _kernel_micro():
+            emit(name, us, derived)
+        for name, val, derived in _roofline_summary():
+            emit(name, val, derived)
+    if args.as_json:
+        json.dump(collected, sys.stdout, indent=2)
+        print()
 
 
 if __name__ == "__main__":

@@ -1,52 +1,86 @@
 """Discrete-event cluster engine (§V scheduler, §VI-C straggler study).
 
 A genuine event-driven simulator of the extended Kubernetes scheduler from
-the paper, replacing the per-node "next-free clock" approximation that used
-to live in ``scheduler.py``.  The event model:
+the paper, rearchitected (PR 2) for million-request runs.  The simulation
+semantics are unchanged from the PR-1 engine — the golden-trace tests pin
+a bit-identical ``RequestResult`` stream seed-for-seed against the frozen
+reference in :mod:`repro.core.engine_ref` — but the hot path is now
+array-backed:
 
-  * a binary heap of ``_Event``s, three kinds:
-      - ``arrival``  — a request enters the system (times come from a
-        pluggable :mod:`repro.core.arrivals` process)
+  * **batched event path** — per-request state lives in structure-of-arrays
+    storage (numpy ``float64``/``int8`` arrays plus parallel Python lists
+    for the per-event mutable codes), not per-request ``_Req``/``_Copy``
+    objects.  Pipeline picks, acceleratability, placement hashes and
+    service-quantile tail multipliers are pre-sampled in vectorized batches
+    before/alongside the loop; the loop itself touches only plain tuples,
+    ints and floats.
+  * **streamed arrivals** — arrivals are consumed from the sorted arrival
+    vector through an index cursor (materialized to Python floats in
+    64K-request chunks), so the event heap holds only O(in-flight) events
+    instead of O(total requests).  Hedge timers all share one constant
+    budget, so they fire in arrival order and live in a FIFO deque rather
+    than the heap — the heap holds only the finish events of currently
+    running copies (at most one per server).  Ties between an arrival and
+    a dynamic event break toward the arrival, exactly like the PR-1 global
+    event sequence numbers did.
+  * **O(1) queues** — each server's FCFS queue is a ``deque``; hedged-loser
+    cancellation tombstones the copy in place (state flip) instead of an
+    O(n) ``list.remove``, and the dispatch loop discards tombstones when
+    they surface at the head.  A tombstoned copy is never started (asserted
+    in the dispatch loop and counted in ``tombstones_discarded``).
+  * **indexed CPU load heap** — the least-loaded CPU pick is a lazy
+    ``(load, index)`` heap with stale-entry invalidation instead of an
+    O(n_cpu) scan; ties still break toward the lowest node index.
+  * **event model** — three event kinds, exactly as before:
+      - ``arrival``  — a request enters (times from a pluggable
+        :mod:`repro.core.arrivals` process)
       - ``finish``   — a running copy completes service on its node
       - ``hedge``    — the hedge timer for a queued acceleratable request
         expires
-  * **data-aware placement** — each acceleratable request's payload is
-    placed through :class:`repro.core.placement.StoragePool` (deterministic
-    hash spread over ``Acceleratable_Storage`` drives) and the request is
-    dispatched to the DSCS drive that *holds* its object, never a uniform
-    random draw.  Each drive runs a FCFS, run-to-completion queue (no DSA
-    multi-tenancy, §V) with queue-depth telemetry.
+  * **data-aware placement** — each acceleratable request's payload lands
+    on the ``Acceleratable_Storage`` drive its key hashes to (the same
+    SHA-1 spread :class:`repro.core.placement.StoragePool` computes) and
+    the request is dispatched to the drive that *holds* it.  Per-drive
+    FCFS, run-to-completion, no DSA multi-tenancy (§V), with
+    time-weighted queue-depth telemetry finalized to a common end-of-run
+    horizon.
   * **real hedged dispatch** — if an acceleratable request is still queued
     ``hedge_budget_s`` after arrival, a second copy is issued on the
     least-loaded CPU node.  Both copies race; the first finisher wins and
-    the loser is cancelled: a still-queued loser is removed from its queue
-    (consumes no service), while an already-running loser runs to
-    completion occupying its node (run-to-completion — no preemption) and
-    its result is discarded.  ``RequestResult`` records ``hedged``,
-    ``winner`` and both finish times so tail-latency attribution (Fig. 16)
-    is observable.
+    the loser is cancelled: a still-queued loser is tombstoned (consumes
+    no service), while an already-running loser runs to completion
+    occupying its node (run-to-completion — no preemption) and its result
+    is discarded.  ``RequestResult`` records ``hedged``, ``winner`` and
+    both finish times so tail-latency attribution (Fig. 16) is observable.
 
 Every stochastic choice — pipeline sampling, service-time tails (drawn by
 quantile inversion through ``LatencyModel.e2e(q=u)``) and the arrival
 stream — derives from the single engine seed, so a run is exactly
 reproducible and two engines with equal seeds emit identical
-``RequestResult`` streams.
+``RequestResult`` streams.  ``run()`` returns the historical
+``List[RequestResult]``; ``run_soa()`` returns the native
+:class:`EngineTrace` structure-of-arrays view (what
+``benchmarks/bench_engine.py`` measures), and :class:`SampleBank` lets
+repeated runs share one sampling pass (common random numbers for the
+throughput binary search).
 """
 from __future__ import annotations
 
+import hashlib
 import heapq
 import math
-from collections import defaultdict
+from array import array
+from collections import defaultdict, deque
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.arrivals import ArrivalProcess
 from repro.core.function import Pipeline
 from repro.core.latency import LatencyModel, _erfinv
-from repro.core.placement import StoragePool
 from repro.core.platforms import PLATFORMS
+from repro.core.workloads import Workload
 
 
 @dataclass
@@ -61,16 +95,33 @@ class Telemetry:
         return self.counters[name]
 
 
-class _ServiceCache:
-    """Closed-form service-time sampler.
+def _erfinv_vec(x: np.ndarray) -> np.ndarray:
+    """Vectorized Winitzki approximation — same formula as
+    :func:`repro.core.latency._erfinv`, batched through numpy."""
+    a = 0.147
+    ln = np.log(1.0 - x * x)
+    t = 2.0 / (math.pi * a) + ln / 2.0
+    return np.copysign(np.sqrt(np.sqrt(t * t - ln / a) - t), x)
+
+
+class _ServiceSampler:
+    """Chunked, vectorized service-time sampler by quantile inversion.
 
     ``LatencyModel.pipeline_breakdown`` at quantile ``q`` decomposes as
     ``A + R*Tr(q) + W*Tw(q)`` — a deterministic part plus the summed
     network-read/-write bases scaled by their shared lognormal quantile
     multipliers.  Solving that 3x3 system once per (workload, platform)
-    turns every per-request draw into two ``exp`` calls instead of a full
-    breakdown (~400x faster), which is what makes the throughput binary
-    search affordable at fleet scale.
+    turns every per-request draw into one fused multiply-add over
+    pre-transformed tail multipliers.
+
+    Uniform draws are taken from the engine rng in chunks of ``chunk`` and
+    pushed through the erfinv/exp transform in one vectorized batch, then
+    consumed one value per service start — the consumption *order* is the
+    engine's event order, so two engines that process events identically
+    draw identical values.  ``numpy``'s vectorized chunk draw consumes the
+    PCG64 stream exactly like per-call scalar draws, and because both the
+    optimized and the frozen reference engine share this sampler, their
+    streams are bit-identical regardless of the host's libm/SIMD exp.
 
     Modeling note: a single uniform draw ``u`` drives every tail multiplier
     of a request comonotonically (all reads and writes are slow together),
@@ -81,42 +132,72 @@ class _ServiceCache:
     shapes, fleet ratios) are unaffected.
     """
 
-    def __init__(self, lm: LatencyModel):
+    def __init__(self, lm: LatencyModel, chunk: int = 4096,
+                 persistent: bool = False):
         self.lm = lm
-        self._coef: Dict[tuple, np.ndarray] = {}
+        self.chunk = chunk
+        self.persistent = persistent        # keep draws across start() calls
+        self._coef: Dict[tuple, Tuple[float, float, float]] = {}
+        self._rng: Optional[np.random.Generator] = None
+        self._tr: List[float] = []
+        self._tw: List[float] = []
+        self._i = 0
 
+    # -- coefficient fitting (deterministic, no rng) -------------------------
     def _tails(self, q: float) -> tuple:
         z = math.sqrt(2.0) * _erfinv(2.0 * q - 1.0)
         return (math.exp(self.lm.params.read_sigma * z),
                 math.exp(self.lm.params.write_sigma * z))
 
-    def __call__(self, pipe: Pipeline, platform: str, u: float) -> float:
+    def coef(self, workload: Workload, platform: str) -> Tuple[float, float, float]:
         # service time depends only on (workload, platform); Workload is a
         # frozen dataclass, so this key is stable (unlike id()) and shared
         # across pipeline variants of the same workload
-        key = (pipe.workload, platform)
-        coef = self._coef.get(key)
-        if coef is None:
+        key = (workload, platform)
+        c = self._coef.get(key)
+        if c is None:
             plat = PLATFORMS[platform]
             qs = (0.5, 0.84, 0.975)
             rows = [(1.0,) + self._tails(q) for q in qs]
-            e2e = [self.lm.e2e(plat, pipe.workload, q=q) for q in qs]
+            e2e = [self.lm.e2e(plat, workload, q=q) for q in qs]
             # lstsq, not solve: with read_sigma == write_sigma the Tr and Tw
             # columns coincide and the system is rank-2; the minimum-norm
             # solution still reproduces e2e(q) exactly
-            coef = np.linalg.lstsq(np.array(rows), np.array(e2e),
-                                   rcond=None)[0]
-            self._coef[key] = coef
-        tr, tw = self._tails(u)
-        return float(coef[0] + coef[1] * tr + coef[2] * tw)
+            sol = np.linalg.lstsq(np.array(rows), np.array(e2e), rcond=None)[0]
+            c = (float(sol[0]), float(sol[1]), float(sol[2]))
+            self._coef[key] = c
+        return c
 
+    # -- draw stream ---------------------------------------------------------
+    def start(self, rng: np.random.Generator) -> None:
+        """Bind the per-run rng and reset the draw cursor (persistent
+        samplers keep their already-transformed draws)."""
+        self._rng = rng
+        self._i = 0
+        if not self.persistent:
+            self._tr = []
+            self._tw = []
 
-@dataclass(order=True)
-class _Event:
-    time: float
-    seq: int
-    kind: str = field(compare=False)
-    payload: object = field(compare=False, default=None)
+    def rewind(self) -> None:
+        """Replay the cached draw stream from the top (common random
+        numbers across runs)."""
+        self._i = 0
+
+    def _grow(self) -> None:
+        u = self._rng.uniform(size=self.chunk)
+        np.clip(u, 1e-4, 1.0 - 1e-4, out=u)
+        z = math.sqrt(2.0) * _erfinv_vec(2.0 * u - 1.0)
+        self._tr.extend(np.exp(self.lm.params.read_sigma * z).tolist())
+        self._tw.extend(np.exp(self.lm.params.write_sigma * z).tolist())
+
+    def draw(self, coef: Tuple[float, float, float]) -> float:
+        """One service time: the next cached tail pair through the
+        (workload, platform) coefficients."""
+        i = self._i
+        if i == len(self._tr):
+            self._grow()
+        self._i = i + 1
+        return coef[0] + coef[1] * self._tr[i] + coef[2] * self._tw[i]
 
 
 @dataclass
@@ -145,67 +226,113 @@ class RequestResult:
         return self.start - self.arrival
 
 
-class _Copy:
-    """One issued execution path of a request (DSCS or CPU)."""
-    __slots__ = ("req", "path", "node", "state", "start", "service")
+@dataclass
+class EngineTrace:
+    """Structure-of-arrays view of one run — the engine's native output.
 
-    def __init__(self, req: "_Req", path: str, node: int):
-        self.req = req
-        self.path = path                # "dscs" | "cpu"
-        self.node = node
-        self.state = "queued"           # queued | running | done | cancelled
-        self.start = 0.0
-        self.service = 0.0
-
-
-class _Req:
-    __slots__ = ("rid", "arrival", "pipe", "accel", "drive", "copies",
-                 "hedged", "result")
-
-    def __init__(self, rid: int, arrival: float, pipe: Pipeline):
-        self.rid = rid
-        self.arrival = arrival
-        self.pipe = pipe
-        self.accel = False
-        self.drive = -1
-        self.copies: Dict[str, _Copy] = {}
-        self.hedged = False
-        self.result: Optional[RequestResult] = None
-
-
-class _Server:
-    """Single-server FCFS queue with time-weighted depth accounting."""
-    __slots__ = ("queue", "running", "depth_area", "max_depth", "_last_t")
-
-    def __init__(self):
-        self.queue: List[_Copy] = []
-        self.running: Optional[_Copy] = None
-        self.depth_area = 0.0           # integral of queue depth over time
-        self.max_depth = 0
-        self._last_t = 0.0
-
-    def _account(self, t: float) -> None:
-        self.depth_area += len(self.queue) * (t - self._last_t)
-        self._last_t = t
-
-    def push(self, copy: _Copy, t: float) -> None:
-        self._account(t)
-        self.queue.append(copy)
-        self.max_depth = max(self.max_depth, len(self.queue))
-
-    def cancel_queued(self, copy: _Copy, t: float) -> None:
-        self._account(t)
-        self.queue.remove(copy)
-
-    def pop(self, t: float) -> Optional[_Copy]:
-        if self.running is not None or not self.queue:
-            return None
-        self._account(t)
-        return self.queue.pop(0)
+    One slot per arrival, in arrival order.  ``winner`` is 0 for the DSCS
+    path, 1 for the CPU path; ``drive`` is the serving DSCS drive index or
+    -1 for CPU-served requests; ``dscs_finish``/``cpu_finish`` are NaN
+    where the path never completed (maps to ``None`` in
+    :class:`RequestResult`).  ``to_results()`` materializes the historical
+    object stream; large sweeps should consume the arrays directly.
+    """
+    arrival: np.ndarray                 # float64 arrival times
+    finish: np.ndarray                  # float64 winning-copy finish
+    winner: np.ndarray                  # int8: 0 = dscs, 1 = cpu
+    drive: np.ndarray                   # int32 serving drive or -1
+    start: np.ndarray                   # float64 winning-copy service start
+    service: np.ndarray                 # float64 winning-copy service time
+    hedged: np.ndarray                  # bool
+    dscs_finish: np.ndarray             # float64, NaN = path never finished
+    cpu_finish: np.ndarray              # float64, NaN = path never finished
+    events: int = 0                     # events processed (incl. arrivals)
 
     @property
-    def load(self) -> int:
-        return len(self.queue) + (1 if self.running is not None else 0)
+    def n(self) -> int:
+        return int(self.arrival.size)
+
+    @property
+    def latency(self) -> np.ndarray:
+        return self.finish - self.arrival
+
+    def to_results(self) -> List[RequestResult]:
+        isnan = math.isnan
+        arr, fin = self.arrival.tolist(), self.finish.tolist()
+        win, drv = self.winner.tolist(), self.drive.tolist()
+        st, sv = self.start.tolist(), self.service.tolist()
+        hg = self.hedged.tolist()
+        df, cf = self.dscs_finish.tolist(), self.cpu_finish.tolist()
+        out = []
+        for i in range(len(arr)):
+            w = win[i]
+            out.append(RequestResult(
+                arrival=arr[i], finish=fin[i], accelerated=w == 0,
+                hedged=hg[i], winner="dscs" if w == 0 else "cpu",
+                drive=drv[i], start=st[i], service=sv[i],
+                dscs_finish=None if isnan(df[i]) else df[i],
+                cpu_finish=None if isnan(cf[i]) else cf[i]))
+        return out
+
+
+class SampleBank:
+    """Common-random-numbers cache shared across engine runs.
+
+    The throughput binary search probes the same fleet at many rates; with
+    a bank, pipeline picks and service-tail draws are sampled once (grown
+    on demand, never redrawn) and replayed by every probe, so the whole
+    search costs one sampling pass and probes differ only through the
+    offered load — the classic variance-reduction setup that also makes
+    ``max_throughput`` monotone-friendly in fleet size.
+
+    The bank draws from dedicated SeedSequence children (2, 3) of the
+    engine seed, so banked runs are reproducible but statistically
+    independent of the engine's own (0, 1) arrival/service streams.
+    """
+
+    def __init__(self, engine: "ClusterEngine", pipelines: Sequence[Pipeline]):
+        kids = np.random.SeedSequence(engine.seed).spawn(4)
+        self._pick_rng = np.random.default_rng(kids[2])
+        self._n_pipes = len(pipelines)
+        self._picks = np.empty(0, dtype=np.int64)
+        self.tails = _ServiceSampler(engine.lm, persistent=True)
+        self.tails.start(np.random.default_rng(kids[3]))
+
+    def picks(self, n: int) -> np.ndarray:
+        """The first ``n`` pipeline picks (a prefix of one fixed stream)."""
+        if n > self._picks.size:
+            grow = max(n - self._picks.size, self._picks.size, 1024)
+            self._picks = np.concatenate(
+                [self._picks, self._pick_rng.integers(self._n_pipes, size=grow)])
+        return self._picks[:n]
+
+
+# copy states (per path, per request)
+_FREE, _QUEUED, _RUNNING, _DONE, _CANCELLED = 0, 1, 2, 3, 4
+_CHUNK = 1 << 16                        # arrival-streaming chunk
+
+# Memoized data-aware placement: drive index for request id i is
+# SHA-1("req-i") mod the Acceleratable_Storage drive count — exactly the
+# spread StoragePool.place computes.  Placement is deterministic, so the
+# table is shared by every run and throughput probe with the same fleet.
+_PLACEMENT_CACHE: Dict[int, np.ndarray] = {}
+
+
+def _placement(n_dscs: int, n: int) -> np.ndarray:
+    arr = _PLACEMENT_CACHE.get(n_dscs)
+    if arr is None or arr.size < n:
+        start = 0 if arr is None else int(arr.size)
+        size = max(n, 2 * start, 1024)
+        sha1 = hashlib.sha1
+        from_bytes = int.from_bytes
+        tail = [from_bytes(sha1(b"req-%d" % i).digest(), "big") % n_dscs
+                for i in range(start, size)]
+        grown = np.empty(size, dtype=np.int32)
+        if start:
+            grown[:start] = arr
+        grown[start:] = tail
+        _PLACEMENT_CACHE[n_dscs] = arr = grown
+    return arr[:n]
 
 
 class ClusterEngine:
@@ -226,168 +353,393 @@ class ClusterEngine:
         self.hedge_budget_s = hedge_budget_s
         self.seed = seed
         self.telemetry = telemetry if telemetry is not None else Telemetry()
-        self.drives: List[_Server] = []
-        self.cpus: List[_Server] = []
-        self._svc_cache = _ServiceCache(self.lm)
+        self._sampler = _ServiceSampler(self.lm)
+        self._qstate: Optional[dict] = None
 
-    # -- service-time draws --------------------------------------------------
-    def _service(self, pipe: Pipeline, platform: str,
-                 rng: np.random.Generator) -> float:
-        """Sample a service time by quantile inversion: a uniform draw from
-        the engine's own rng is fed to the deterministic quantile path of
-        the latency model (via the cached decomposition), so samples never
-        touch ``LatencyModel.rng`` and the run is reproducible from the
-        engine seed alone."""
-        u = float(np.clip(rng.uniform(), 1e-4, 1.0 - 1e-4))
-        return self._svc_cache(pipe, platform, u)
+    def sample_bank(self, pipelines: Sequence[Pipeline]) -> SampleBank:
+        """A :class:`SampleBank` for common-random-number runs."""
+        return SampleBank(self, pipelines)
 
-    # -- main loop -----------------------------------------------------------
+    # -- public API ----------------------------------------------------------
     def run(self, pipelines: List[Pipeline], *, arrivals: ArrivalProcess,
             duration_s: float) -> List[RequestResult]:
         """Simulate ``duration_s`` of offered load and drain every request;
         returns one ``RequestResult`` per arrival, in arrival order."""
+        return self.run_soa(pipelines, arrivals=arrivals,
+                            duration_s=duration_s).to_results()
+
+    def run_soa(self, pipelines: Sequence[Pipeline], *,
+                arrivals: Optional[ArrivalProcess] = None,
+                duration_s: float = 0.0,
+                times: Optional[np.ndarray] = None,
+                bank: Optional[SampleBank] = None) -> EngineTrace:
+        """The batched event loop; returns the run as an
+        :class:`EngineTrace`.
+
+        ``times`` (a sorted arrival-time vector) overrides ``arrivals``;
+        ``bank`` replays pre-sampled picks/service draws instead of the
+        engine's own seed-derived streams (common random numbers).
+        """
         ss = np.random.SeedSequence(self.seed)
         arr_rng, rng = (np.random.default_rng(s) for s in ss.spawn(2))
-        pool = StoragePool(n_plain=self.n_plain, n_dscs=self.n_dscs)
-        drive_idx = {d.drive_id: i for i, d in enumerate(pool.dscs_drives())}
-        self.drives = [_Server() for _ in range(self.n_dscs)]
-        self.cpus = [_Server() for _ in range(self.n_cpu)]
+        if times is None:
+            if arrivals is None:
+                raise ValueError("pass arrivals= or times=")
+            if duration_s <= 0.0:
+                raise ValueError("arrivals= needs a positive duration_s "
+                                 "(an empty window would silently simulate "
+                                 "zero requests)")
+            times = arrivals.times(duration_s, arr_rng)
+        times = np.ascontiguousarray(np.asarray(times, dtype=np.float64))
+        n = int(times.size)
+        n_pipes = len(pipelines)
 
-        heap: List[_Event] = []
-        seq = 0
-
-        def push(t: float, kind: str, payload) -> None:
-            nonlocal seq
-            seq += 1
-            heapq.heappush(heap, _Event(t, seq, kind, payload))
-
-        times = arrivals.times(duration_s, arr_rng)
-        reqs: List[_Req] = []
-        for rid, t in enumerate(map(float, times)):
-            pipe = pipelines[int(rng.integers(len(pipelines)))]
-            reqs.append(_Req(rid, t, pipe))
-            push(t, "arrival", reqs[-1])
-
-        while heap:
-            ev = heapq.heappop(heap)
-            if ev.kind == "arrival":
-                self._on_arrival(ev.payload, ev.time, pool, drive_idx,
-                                 rng, push)
-            elif ev.kind == "hedge":
-                self._on_hedge(ev.payload, ev.time, rng, push)
-            else:                       # finish
-                self._on_finish(ev.payload, ev.time, rng, push)
-
-        return [r.result for r in reqs]
-
-    # -- event handlers ------------------------------------------------------
-    def _on_arrival(self, req: _Req, t: float, pool: StoragePool,
-                    drive_idx: Dict[int, int], rng, push) -> None:
-        req.accel = (self.n_dscs > 0
-                     and all(f.acceleratable for f in req.pipe.functions[:2]))
-        if req.accel:
-            # data-aware placement: the payload is written to an
-            # Acceleratable_Storage drive at arrival; the request is then
-            # dispatched to the drive that holds it.
-            drive = pool.place(f"req-{req.rid}", req.pipe.workload.request_bytes,
-                               "Acceleratable_Storage")
-            req.drive = drive_idx[drive.drive_id]
-            copy = _Copy(req, "dscs", req.drive)
-            req.copies["dscs"] = copy
-            self.drives[req.drive].push(copy, t)
-            self.telemetry.inc("dscs_dispatch")
-            if self.hedge_budget_s is not None:
-                push(t + self.hedge_budget_s, "hedge", req)
-            self._maybe_start(self.drives[req.drive], t, rng, push)
+        if bank is not None:
+            picks = bank.picks(n)
+            sampler = bank.tails
+            sampler.rewind()
         else:
-            self._issue_cpu(req, t, rng, push)
-            self.telemetry.inc("cpu_dispatch")
+            picks = (rng.integers(n_pipes, size=n) if n
+                     else np.empty(0, dtype=np.int64))
+            sampler = self._sampler
+            sampler.start(rng)
 
-    def _issue_cpu(self, req: _Req, t: float, rng, push) -> None:
-        node = min(range(self.n_cpu), key=lambda i: (self.cpus[i].load, i))
-        copy = _Copy(req, "cpu", node)
-        req.copies["cpu"] = copy
-        self.cpus[node].push(copy, t)
-        self._maybe_start(self.cpus[node], t, rng, push)
+        # -- vectorized pre-sampling ----------------------------------------
+        nd, nc = self.n_dscs, self.n_cpu
+        coef_d = [sampler.coef(p.workload, "DSCS-Serverless")
+                  for p in pipelines]
+        coef_c = [sampler.coef(p.workload, "Baseline-CPU") for p in pipelines]
+        accel_pipe = np.array(
+            [nd > 0 and all(f.acceleratable for f in p.functions[:2])
+             for p in pipelines], dtype=bool)
+        picks_l = picks.tolist()
+        accel_l = (accel_pipe[picks].tolist() if n else [])
+        drive_l = (_placement(nd, n).tolist() if nd and n else [-1] * n)
 
-    def _on_hedge(self, req: _Req, t: float, rng, push) -> None:
-        dscs = req.copies.get("dscs")
-        if dscs is None or dscs.state != "queued" or req.result is not None:
-            return                      # started or finished in time: no hedge
-        req.hedged = True
-        self.telemetry.inc("hedge_issued")
-        self.telemetry.inc("dscs_fallback")   # budget blown -> CPU path opens
-        self._issue_cpu(req, t, rng, push)
+        # -- per-request SoA state ------------------------------------------
+        ds_l = [0] * n                  # DSCS-copy state codes
+        cs_l = [0] * n                  # CPU-copy state codes
+        c_node_l = [-1] * n
+        hedged_l = [False] * n
+        winner_l = [-1] * n
+        nan = math.nan
+        finish_a = array("d", [nan]) * n
+        dfin_a = array("d", [nan]) * n
+        cfin_a = array("d", [nan]) * n
+        d_start_a = array("d", bytes(8 * n))
+        d_svc_a = array("d", bytes(8 * n))
+        c_start_a = array("d", bytes(8 * n))
+        c_svc_a = array("d", bytes(8 * n))
 
-    def _on_finish(self, copy: _Copy, t: float, rng, push) -> None:
-        server = (self.drives if copy.path == "dscs" else self.cpus)[copy.node]
-        server.running = None
-        req = copy.req
-        if copy.state == "cancelled":
-            # run-to-completion loser draining; back-fill its finish time
-            if req.result is not None:
-                self._record_path_finish(req.result, copy.path, t)
-        else:
-            copy.state = "done"
-            if req.result is None:
-                self._record_win(req, copy, t)
-            self._record_path_finish(req.result, copy.path, t)
-        self._maybe_start(server, t, rng, push)
+        # -- per-server state ------------------------------------------------
+        d_queues = [deque() for _ in range(nd)]
+        c_queues = [deque() for _ in range(nc)]
+        d_busy = [0] * nd; c_busy = [0] * nc
+        d_qd = [0] * nd; c_qd = [0] * nc        # live queued (no tombstones)
+        d_area = [0.0] * nd; c_area = [0.0] * nc
+        d_last = [0.0] * nd; c_last = [0.0] * nc
+        d_maxd = [0] * nd; c_maxd = [0] * nc
+        c_load = [0] * nc
+        loadheap = [(0, i) for i in range(nc)]  # sorted => already a heap
 
-    def _record_win(self, req: _Req, copy: _Copy, t: float) -> None:
-        req.result = RequestResult(
-            arrival=req.arrival, finish=t, accelerated=copy.path == "dscs",
-            hedged=req.hedged, winner=copy.path,
-            drive=req.drive if copy.path == "dscs" else -1,
-            start=copy.start, service=copy.service)
-        self.telemetry.inc(f"hedge_won_{copy.path}" if req.hedged
-                           else f"{copy.path}_served")
-        loser = req.copies.get("cpu" if copy.path == "dscs" else "dscs")
-        if loser is None or loser.state in ("done", "cancelled"):
-            return
-        if loser.state == "queued":
-            lsrv = (self.drives if loser.path == "dscs"
-                    else self.cpus)[loser.node]
-            lsrv.cancel_queued(loser, t)
-            self.telemetry.inc("cancelled_in_queue")
-        else:                           # running: no preemption, drains
-            self.telemetry.inc("cancelled_in_service")
-        loser.state = "cancelled"
+        hpush, hpop = heapq.heappush, heapq.heappop
+        INF = math.inf
+        hedge = self.hedge_budget_s
+        heap: List[tuple] = []          # (time, (rid << 1) | path)
+        hedge_dq: deque = deque()       # (time, rid): FIFO, arrival order
+        end_t = 0.0                     # time of the last completion
+        # the sampler's chunked draw stream, inlined: _grow() extends the
+        # tr/tw lists in place, so these aliases stay valid across refills
+        s_tr = sampler._tr; s_tw = sampler._tw
+        s_grow = sampler._grow
+        s_i = sampler._i
+        # telemetry accumulators (flushed once at the end)
+        t_ddisp = t_cdisp = t_hedge = 0
+        t_won_d = t_won_c = t_srv_d = t_srv_c = 0
+        t_can_q = t_can_s = t_tomb = 0
 
-    @staticmethod
-    def _record_path_finish(res: Optional[RequestResult], path: str,
-                            t: float) -> None:
-        if res is None:
-            return
-        if path == "dscs" and res.dscs_finish is None:
-            res.dscs_finish = t
-        elif path == "cpu" and res.cpu_finish is None:
-            res.cpu_finish = t
-
-    def _maybe_start(self, server: _Server, t: float, rng, push) -> None:
-        while True:
-            copy = server.pop(t)
-            if copy is None:
+        # -- dispatch helpers ------------------------------------------------
+        def start_drive(d: int, t: float) -> None:
+            nonlocal t_tomb, s_i
+            dq = d_queues[d]
+            while dq:
+                r2 = dq.popleft()
+                st = ds_l[r2]
+                if st == _CANCELLED:    # tombstone surfaced: discard, never start
+                    t_tomb += 1
+                    continue
+                assert st == _QUEUED, "only queued copies may start service"
+                d_area[d] += d_qd[d] * (t - d_last[d]); d_last[d] = t
+                d_qd[d] -= 1
+                ds_l[r2] = _RUNNING
+                i = s_i
+                if i == len(s_tr):
+                    s_grow()
+                s_i = i + 1
+                c = coef_d[picks_l[r2]]
+                svc = c[0] + c[1] * s_tr[i] + c[2] * s_tw[i]
+                d_start_a[r2] = t; d_svc_a[r2] = svc
+                d_busy[d] = 1
+                hpush(heap, (t + svc, r2 << 1))
                 return
-            if copy.state == "cancelled":   # defensive: cancelled are removed
+
+        def start_cpu(node: int, t: float) -> None:
+            nonlocal t_tomb, s_i
+            cq = c_queues[node]
+            while cq:
+                r2 = cq.popleft()
+                st = cs_l[r2]
+                if st == _CANCELLED:
+                    t_tomb += 1
+                    continue
+                assert st == _QUEUED, "only queued copies may start service"
+                c_area[node] += c_qd[node] * (t - c_last[node])
+                c_last[node] = t
+                c_qd[node] -= 1
+                cs_l[r2] = _RUNNING
+                i = s_i
+                if i == len(s_tr):
+                    s_grow()
+                s_i = i + 1
+                c = coef_c[picks_l[r2]]
+                svc = c[0] + c[1] * s_tr[i] + c[2] * s_tw[i]
+                c_start_a[r2] = t; c_svc_a[r2] = svc
+                c_busy[node] = 1
+                hpush(heap, (t + svc, (r2 << 1) | 1))
+                return
+
+        def issue_cpu(rid: int, t: float) -> None:
+            nonlocal s_i
+            # least-loaded CPU node, lowest index on ties: lazy indexed heap
+            while True:
+                load, node = loadheap[0]
+                if c_load[node] == load:
+                    break
+                hpop(loadheap)          # stale entry
+            c_node_l[rid] = node
+            load += 1; c_load[node] = load
+            hpush(loadheap, (load, node))
+            if c_busy[node] or c_queues[node]:
+                c_area[node] += c_qd[node] * (t - c_last[node])
+                c_last[node] = t
+                c_queues[node].append(rid)
+                q = c_qd[node] + 1; c_qd[node] = q
+                if q > c_maxd[node]: c_maxd[node] = q
+                cs_l[rid] = _QUEUED
+                # a server only goes idle by draining its deque to empty
+                # (discarding tombstones), so nonempty deque => busy
+                assert c_busy[node], "idle CPU node held a nonempty queue"
+            else:
+                # idle node: start immediately (transient depth 1)
+                c_last[node] = t
+                if not c_maxd[node]: c_maxd[node] = 1
+                cs_l[rid] = _RUNNING
+                i = s_i
+                if i == len(s_tr):
+                    s_grow()
+                s_i = i + 1
+                c = coef_c[picks_l[rid]]
+                svc = c[0] + c[1] * s_tr[i] + c[2] * s_tw[i]
+                c_start_a[rid] = t; c_svc_a[rid] = svc
+                c_busy[node] = 1
+                hpush(heap, (t + svc, (rid << 1) | 1))
+
+        # -- main loop -------------------------------------------------------
+        # Event order: arrivals win every tie (they had the lowest sequence
+        # numbers in the PR-1 heap); hedge timers share one constant budget
+        # so they fire in FIFO order from hedge_dq; finish events order by
+        # (time, copy id) — service times are continuous draws, so exact
+        # finish-time ties have measure zero and the golden-trace gates pin
+        # that the ordering stays equivalent.
+        ai = 0
+        base = 0
+        if n:
+            limit = min(n, _CHUNK)
+            times_l = times[:limit].tolist()
+            next_t = times_l[0]
+        else:
+            limit, times_l, next_t = 0, [], INF
+
+        while True:
+            ft = heap[0][0] if heap else INF
+            ht = hedge_dq[0][0] if hedge_dq else INF
+            if ht <= ft:
+                if ht < next_t:         # hedge timer fires
+                    t, rid = hedge_dq.popleft()
+                    if ds_l[rid] == _QUEUED:   # still waiting: open CPU path
+                        hedged_l[rid] = True
+                        t_hedge += 1
+                        issue_cpu(rid, t)
+                    continue
+            elif ft < next_t:           # a running copy finishes
+                t, code = hpop(heap)
+                end_t = t
+                rid = code >> 1
+                if code & 1:            # CPU copy finished
+                    node = c_node_l[rid]
+                    c_busy[node] = 0
+                    load = c_load[node] - 1; c_load[node] = load
+                    hpush(loadheap, (load, node))
+                    if cs_l[rid] == _CANCELLED:
+                        cfin_a[rid] = t        # run-to-completion loser drains
+                    else:
+                        cs_l[rid] = _DONE
+                        finish_a[rid] = t
+                        winner_l[rid] = 1
+                        cfin_a[rid] = t
+                        dst = ds_l[rid]
+                        if dst == _QUEUED:     # tombstone the DSCS loser
+                            d = drive_l[rid]
+                            d_area[d] += d_qd[d] * (t - d_last[d])
+                            d_last[d] = t
+                            d_qd[d] -= 1
+                            ds_l[rid] = _CANCELLED
+                            t_can_q += 1
+                        elif dst == _RUNNING:  # no preemption: drains
+                            ds_l[rid] = _CANCELLED
+                            t_can_s += 1
+                        if hedged_l[rid]:
+                            t_won_c += 1
+                        else:
+                            t_srv_c += 1
+                    if c_queues[node]:
+                        start_cpu(node, t)
+                else:                   # DSCS copy finished
+                    d = drive_l[rid]
+                    d_busy[d] = 0
+                    if ds_l[rid] == _CANCELLED:
+                        dfin_a[rid] = t
+                    else:
+                        ds_l[rid] = _DONE
+                        finish_a[rid] = t
+                        winner_l[rid] = 0
+                        dfin_a[rid] = t
+                        if hedged_l[rid]:
+                            t_won_d += 1
+                            cst = cs_l[rid]
+                            if cst == _QUEUED:     # tombstone the CPU loser
+                                node = c_node_l[rid]
+                                c_area[node] += c_qd[node] * (t - c_last[node])
+                                c_last[node] = t
+                                c_qd[node] -= 1
+                                load = c_load[node] - 1; c_load[node] = load
+                                hpush(loadheap, (load, node))
+                                cs_l[rid] = _CANCELLED
+                                t_can_q += 1
+                            elif cst == _RUNNING:
+                                cs_l[rid] = _CANCELLED
+                                t_can_s += 1
+                        else:
+                            t_srv_d += 1
+                    if d_queues[d]:
+                        start_drive(d, t)
                 continue
-            copy.state = "running"
-            copy.start = t
-            plat = "DSCS-Serverless" if copy.path == "dscs" else "Baseline-CPU"
-            copy.service = self._service(copy.req.pipe, plat, rng)
-            server.running = copy
-            push(t + copy.service, "finish", copy)
-            return
+            if next_t == INF:
+                break
+            # arrival (wins ties against dynamic events, like the PR-1 seq)
+            t = next_t
+            rid = ai
+            if accel_l[rid]:
+                d = drive_l[rid]
+                t_ddisp += 1
+                if hedge is not None:
+                    hedge_dq.append((t + hedge, rid))
+                if d_busy[d] or d_queues[d]:
+                    d_area[d] += d_qd[d] * (t - d_last[d]); d_last[d] = t
+                    d_queues[d].append(rid)
+                    q = d_qd[d] + 1; d_qd[d] = q
+                    if q > d_maxd[d]: d_maxd[d] = q
+                    ds_l[rid] = _QUEUED
+                    # a server only goes idle by draining its deque to empty
+                    # (discarding tombstones), so nonempty deque => busy
+                    assert d_busy[d], "idle drive held a nonempty queue"
+                else:
+                    # idle drive: start immediately (transient depth 1)
+                    d_last[d] = t
+                    if not d_maxd[d]: d_maxd[d] = 1
+                    ds_l[rid] = _RUNNING
+                    i = s_i
+                    if i == len(s_tr):
+                        s_grow()
+                    s_i = i + 1
+                    c = coef_d[picks_l[rid]]
+                    svc = c[0] + c[1] * s_tr[i] + c[2] * s_tw[i]
+                    d_start_a[rid] = t; d_svc_a[rid] = svc
+                    d_busy[d] = 1
+                    hpush(heap, (t + svc, rid << 1))
+            else:
+                issue_cpu(rid, t)
+                t_cdisp += 1
+            ai += 1
+            if ai < n:
+                if ai == limit:
+                    base = ai
+                    limit = min(n, ai + _CHUNK)
+                    times_l = times[ai:limit].tolist()
+                next_t = times_l[ai - base]
+            else:
+                next_t = INF
+        # every enqueued hedge timer is eventually popped and every started
+        # copy (= one sampler draw) finishes, so the count is exact
+        events = (n + (s_i - sampler._i)
+                  + (t_ddisp if hedge is not None else 0))
+        sampler._i = s_i                # keep the sampler cursor consistent
+
+        # -- flush telemetry -------------------------------------------------
+        inc = self.telemetry.inc
+        for name, v in (("dscs_dispatch", t_ddisp), ("cpu_dispatch", t_cdisp),
+                        ("hedge_issued", t_hedge), ("dscs_fallback", t_hedge),
+                        ("hedge_won_dscs", t_won_d), ("hedge_won_cpu", t_won_c),
+                        ("dscs_served", t_srv_d), ("cpu_served", t_srv_c),
+                        ("cancelled_in_queue", t_can_q),
+                        ("cancelled_in_service", t_can_s),
+                        ("tombstones_discarded", t_tomb)):
+            if v:
+                inc(name, v)
+
+        # queue telemetry, finalized to the common end-of-run horizon
+        self._qstate = {"horizon": end_t,
+                        "dscs": (d_area, d_maxd), "cpu": (c_area, c_maxd),
+                        "tombstones_discarded": t_tomb,
+                        "cancelled_in_queue": t_can_q}
+
+        # -- assemble the trace ---------------------------------------------
+        def as_np(a: array) -> np.ndarray:
+            return (np.frombuffer(a, dtype=np.float64) if n
+                    else np.empty(0, dtype=np.float64))
+
+        winner_np = np.array(winner_l, dtype=np.int8)
+        drive_np = np.array(drive_l, dtype=np.int32)
+        dscs_won = winner_np == 0
+        return EngineTrace(
+            arrival=times, finish=as_np(finish_a), winner=winner_np,
+            drive=np.where(dscs_won, drive_np, -1).astype(np.int32),
+            start=np.where(dscs_won, as_np(d_start_a), as_np(c_start_a)),
+            service=np.where(dscs_won, as_np(d_svc_a), as_np(c_svc_a)),
+            hedged=np.array(hedged_l, dtype=bool),
+            dscs_finish=as_np(dfin_a), cpu_finish=as_np(cfin_a),
+            events=events)
 
     # -- telemetry -----------------------------------------------------------
     def queue_stats(self) -> Dict[str, Dict[str, float]]:
-        """Per-class queue-depth telemetry from the last run."""
-        def summarize(servers: List[_Server]) -> Dict[str, float]:
-            if not servers:
-                return {"max_depth": 0.0, "mean_depth": 0.0}
-            horizon = max((s._last_t for s in servers), default=0.0)
-            mean = (sum(s.depth_area for s in servers)
-                    / (horizon * len(servers))) if horizon > 0 else 0.0
-            return {"max_depth": float(max(s.max_depth for s in servers)),
-                    "mean_depth": float(mean)}
-        return {"dscs": summarize(self.drives), "cpu": summarize(self.cpus)}
+        """Per-class queue-depth telemetry from the last run.
+
+        Every server is finalized to the *common* end-of-run horizon (the
+        time of the last event anywhere in the fleet), so servers of a
+        class that idled early no longer skew ``mean_depth``.  A drained
+        server holds depth 0 after its last event, so its depth integral is
+        already complete; the shared horizon only fixes the denominator.
+        """
+        empty = {"max_depth": 0.0, "mean_depth": 0.0}
+        if self._qstate is None:
+            return {"dscs": dict(empty), "cpu": dict(empty)}
+        horizon = self._qstate["horizon"]
+
+        def summarize(area: List[float], maxd: List[int]) -> Dict[str, float]:
+            if not area:
+                return dict(empty)
+            mean = sum(area) / (horizon * len(area)) if horizon > 0 else 0.0
+            return {"max_depth": float(max(maxd)), "mean_depth": float(mean)}
+
+        return {"dscs": summarize(*self._qstate["dscs"]),
+                "cpu": summarize(*self._qstate["cpu"])}

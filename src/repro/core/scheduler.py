@@ -29,8 +29,8 @@ from typing import List, Optional
 import numpy as np
 
 from repro.core.arrivals import ArrivalProcess, PoissonProcess
-from repro.core.engine import (ClusterEngine, RequestResult,  # noqa: F401
-                               Telemetry)
+from repro.core.engine import (ClusterEngine, EngineTrace,  # noqa: F401
+                               RequestResult, Telemetry)
 from repro.core.function import Pipeline
 from repro.core.latency import LatencyModel
 from repro.core.placement import StoragePool
@@ -87,16 +87,47 @@ class ClusterSim:
                        arrivals: Optional[ArrivalProcess] = None) -> float:
         """Binary-search the highest mean RPS meeting the SLA.  ``arrivals``
         selects the load *shape*; its rate is rescaled at every probe (so
-        trace replay, which has no free rate, is rejected)."""
+        trace replay, which has no free rate, is rejected).
+
+        Every probe replays the same :class:`~repro.core.engine.SampleBank`
+        (common random numbers): pipeline picks and service-tail draws are
+        sampled once for the whole search, and for Poisson load the arrival
+        stream itself is one cached vector of unit-rate exponential gaps
+        rescaled per probe (``t_i(r) = cumsum(gaps)_i / r``) — a single
+        sampling pass instead of twelve, and probes differ only through
+        the offered rate, not sampling noise.  Shaped (bursty/diurnal)
+        processes keep their wall-clock phase structure, so only their
+        arrival stream is redrawn per probe; picks and service draws stay
+        banked.
+        """
         proto = arrivals if arrivals is not None else PoissonProcess(rate=1.0)
+        bank = self.engine.sample_bank(pipelines)
+        poisson = type(proto) is PoissonProcess
+        if poisson:
+            # one cached unit-rate arrival stream for the whole search
+            gap_rng = np.random.default_rng(
+                np.random.SeedSequence(self.seed).spawn(2)[0])
+            cum = np.cumsum(gap_rng.standard_exponential(
+                max(int(hi * duration_s * 1.25), 64)))
+
+        def probe(rps: float) -> EngineTrace:
+            nonlocal cum
+            if not poisson:
+                return self.engine.run_soa(pipelines, duration_s=duration_s,
+                                           arrivals=proto.with_rate(rps),
+                                           bank=bank)
+            horizon = rps * duration_s
+            while cum[-1] < horizon:    # rare: extend the cached stream
+                cum = np.concatenate([cum, cum[-1] + np.cumsum(
+                    gap_rng.standard_exponential(cum.size))])
+            times = cum[:np.searchsorted(cum, horizon)] / rps
+            return self.engine.run_soa(pipelines, times=times, bank=bank)
 
         def ok(rps: float) -> bool:
-            res = self.run(pipelines, duration_s=duration_s,
-                           arrivals=proto.with_rate(rps))
-            if not res:
+            trace = probe(rps)
+            if not trace.n:
                 return True
-            lat = np.array([r.latency for r in res])
-            return float(np.mean(lat <= sla_s)) >= sla_frac
+            return float(np.mean(trace.latency <= sla_s)) >= sla_frac
 
         for _ in range(12):
             mid = math.sqrt(lo * hi)

@@ -1,5 +1,10 @@
 """Discrete-event cluster engine: invariants, determinism, hedging,
-data-aware placement and the arrival-process library."""
+data-aware placement, the arrival-process library, and golden-trace
+equivalence of the array-backed hot path against the frozen pre-PR2
+reference engine."""
+import json
+import pathlib
+
 import numpy as np
 import pytest
 
@@ -9,6 +14,7 @@ from repro.core.function import standard_pipeline
 from repro.core.placement import StoragePool
 from repro.core.scheduler import ClusterSim
 
+GOLDEN = pathlib.Path(__file__).parent / "golden"
 PIPES = [standard_pipeline(n) for n in ("asset_damage", "content_moderation")]
 
 
@@ -128,6 +134,136 @@ def test_bursty_golden_trace():
     a = _overloaded_sim(seed=3).run(PIPES, arrivals=arr, duration_s=8)
     b = _overloaded_sim(seed=3).run(PIPES, arrivals=arr, duration_s=8)
     assert a == b and len(a) > 0
+
+
+# --------------------------------------------------------------------------
+# golden-trace gates: the optimized engine must reproduce the pre-refactor
+# RequestResult stream bit-for-bit
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [13, 21])
+def test_golden_trace_pins_pre_refactor_stream(seed):
+    """The exact pre-PR2 RequestResult stream, captured from the frozen
+    reference engine and committed as JSON, must be reproduced field-for-
+    field (float equality, no tolerance) by the optimized engine."""
+    golden = json.loads((GOLDEN / f"engine_trace_seed{seed}.json").read_text())
+    cfg = golden["config"]
+    sim = ClusterSim(n_dscs=cfg["n_dscs"], n_cpu=cfg["n_cpu"],
+                     hedge_budget_s=cfg["hedge_budget_s"], seed=cfg["seed"])
+    res = sim.run([standard_pipeline(n) for n in cfg["pipelines"]],
+                  arrivals=PoissonProcess(rate=cfg["rate"]),
+                  duration_s=cfg["duration_s"])
+    assert len(res) == golden["n"]
+    for i, (r, row) in enumerate(zip(res, golden["results"])):
+        got = [r.arrival, r.finish, r.accelerated, r.hedged, r.winner,
+               r.drive, r.start, r.service, r.dscs_finish, r.cpu_finish]
+        assert got == row, f"request {i} deviates from the pinned trace"
+
+
+@pytest.mark.parametrize("seed", [13, 21])
+def test_optimized_engine_matches_frozen_reference(seed):
+    """Live old-vs-new gate: the frozen object-based reference engine and
+    the array-backed engine must emit identical RequestResult streams and
+    identical telemetry for the same seed (portable across hosts because
+    both consume the same vectorized sampler stream)."""
+    from repro.core.engine import ClusterEngine
+    from repro.core.engine_ref import ReferenceClusterEngine
+
+    kw = dict(n_dscs=4, n_cpu=8, hedge_budget_s=0.05, seed=seed)
+    arr = BurstyOnOff(rate=70.0, burst_factor=4.0)
+    ref = ReferenceClusterEngine(**kw)
+    new = ClusterEngine(**kw)
+    a = ref.run(PIPES, arrivals=arr, duration_s=8)
+    b = new.run(PIPES, arrivals=arr, duration_s=8)
+    assert len(a) == len(b) > 0
+    assert a == b
+    for k in ("dscs_dispatch", "cpu_dispatch", "hedge_issued",
+              "dscs_fallback", "hedge_won_dscs", "hedge_won_cpu",
+              "dscs_served", "cpu_served", "cancelled_in_queue",
+              "cancelled_in_service"):
+        assert ref.telemetry.get(k) == new.telemetry.get(k), k
+
+
+def test_run_soa_consistent_with_object_stream():
+    """The SoA trace and the materialized RequestResult stream are two
+    views of the same run."""
+    sim = _overloaded_sim(seed=2)
+    trace = sim.engine.run_soa(PIPES, arrivals=PoissonProcess(rate=80.0),
+                               duration_s=6)
+    res = trace.to_results()
+    assert trace.n == len(res) > 0
+    assert trace.events > 2 * trace.n           # arrivals + finishes at least
+    lat = trace.latency
+    for i, r in enumerate(res):
+        assert r.latency == lat[i]
+        assert (r.winner == "dscs") == (trace.winner[i] == 0)
+        assert r.drive == trace.drive[i]
+    # a fresh run through the object API replays exactly
+    assert sim.run(PIPES, rps=80.0, duration_s=6) == res
+
+
+def test_sample_bank_replays_identically():
+    """Banked runs (common random numbers) are exactly reproducible."""
+    sim = _overloaded_sim(seed=11)
+    eng = sim.engine
+    bank = eng.sample_bank(PIPES)
+    times = PoissonProcess(rate=90.0).times(6.0, np.random.default_rng(0))
+    a = eng.run_soa(PIPES, times=times, bank=bank)
+    b = eng.run_soa(PIPES, times=times, bank=bank)
+    assert np.array_equal(a.finish, b.finish)
+    assert np.array_equal(a.winner, b.winner)
+    assert np.array_equal(a.service, b.service)
+
+
+# --------------------------------------------------------------------------
+# deque + tombstone cancellation (satellite: tombstones are never started)
+# --------------------------------------------------------------------------
+
+def test_tombstoned_copies_are_never_started():
+    """Queue-cancelled losers must never receive service: every such loser
+    leaves exactly one path finish time unset, the dispatch loop discards
+    (never starts) surfaced tombstones, and the engine asserts on any
+    non-queued copy reaching the server."""
+    sim = ClusterSim(n_dscs=3, n_cpu=6, hedge_budget_s=0.02, seed=4)
+    res = sim.run(PIPES, rps=120.0, duration_s=12)
+    tel = sim.telemetry
+    assert tel.get("cancelled_in_queue") > 0, "scenario must cancel in queue"
+    # a cancelled-in-queue loser never ran: exactly one path finish is None
+    one_sided = sum(1 for r in res if r.hedged
+                    and (r.dscs_finish is None) != (r.cpu_finish is None))
+    assert one_sided == tel.get("cancelled_in_queue")
+    # the winner's path always finished
+    for r in res:
+        assert (r.dscs_finish if r.winner == "dscs" else r.cpu_finish) is not None
+    # tombstones actually surfaced and were discarded by the dispatch loop,
+    # and no more of them than copies cancelled while queued
+    assert 0 < tel.get("tombstones_discarded") <= tel.get("cancelled_in_queue")
+
+
+# --------------------------------------------------------------------------
+# queue_stats: common end-of-run horizon (satellite fix)
+# --------------------------------------------------------------------------
+
+def test_queue_stats_uses_common_end_of_run_horizon():
+    """Four simultaneous arrivals on two CPU nodes: each node's depth
+    integral is its first service time, and the mean is taken over the
+    horizon of the *last* completion fleet-wide — not each server's own
+    last-activity time, which deflated the denominator before the fix."""
+    sim = ClusterSim(n_dscs=0, n_cpu=2, seed=0)
+    res = sim.run([standard_pipeline("asset_damage")],
+                  arrivals=TraceReplay(rate=0.0, trace=(0.0, 0.0, 0.0, 0.0)),
+                  duration_s=10.0)
+    assert len(res) == 4
+    r = sorted(res, key=lambda x: x.arrival)    # all at t=0, arrival order kept
+    # rid0 -> node0, rid1 -> node1, rid2 queues on node0, rid3 on node1
+    f0, f1 = r[0].finish, r[1].finish
+    horizon = max(r[2].finish, r[3].finish)
+    q = sim.queue_stats()["cpu"]
+    assert q["max_depth"] == 1.0
+    want = (f0 + f1) / (2.0 * horizon)
+    assert abs(q["mean_depth"] - want) < 1e-12
+    # the pre-fix per-server-horizon formula would have inflated the mean
+    assert q["mean_depth"] < (f0 + f1) / (2.0 * max(f0, f1))
 
 
 # --------------------------------------------------------------------------

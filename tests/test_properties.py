@@ -70,6 +70,24 @@ def test_moe_capacity_and_conservation(t, e, k):
     assert float(aux) >= 0.4   # Switch aux ~1 at balance; small-T noise
 
 
+@settings(max_examples=5, deadline=None)
+@given(st.sampled_from([(1, 2), (2, 4), (4, 8), (2, 8), (1, 16)]))
+def test_max_throughput_monotone_in_n_dscs(pair):
+    """With common random numbers (one SampleBank + one cached arrival
+    stream per search), adding DSCS drives never lowers the SLA-feasible
+    throughput: every probe sees the same picks/service draws, so fleets
+    differ only through capacity."""
+    from repro.core.function import standard_pipeline
+    from repro.core.scheduler import ClusterSim
+
+    lo_d, hi_d = pair
+    pipes = [standard_pipeline("content_moderation")]
+    kw = dict(sla_s=0.6, duration_s=4.0, hi=512.0)
+    lo = ClusterSim(n_dscs=lo_d, n_cpu=12, seed=9).max_throughput(pipes, **kw)
+    hi = ClusterSim(n_dscs=hi_d, n_cpu=12, seed=9).max_throughput(pipes, **kw)
+    assert hi >= lo - 1e-9
+
+
 @settings(max_examples=20, deadline=None)
 @given(st.integers(2, 6), st.integers(2, 50))
 def test_placement_deterministic_and_class_respecting(n_dscs, n_obj):
