@@ -33,6 +33,9 @@ class ArrivalProcess:
     rate: float                         # long-run mean requests/second
 
     def times(self, duration_s: float, rng: np.random.Generator) -> np.ndarray:
+        """Sample one arrival stream: a sorted float64 vector of arrival
+        times in ``[0, duration_s)``, drawn exclusively from ``rng`` (so
+        one engine seed reproduces the full stream)."""
         raise NotImplementedError
 
     def with_rate(self, rate: float) -> "ArrivalProcess":
@@ -45,6 +48,7 @@ class PoissonProcess(ArrivalProcess):
     """Homogeneous Poisson arrivals (i.i.d. exponential gaps)."""
 
     def times(self, duration_s: float, rng: np.random.Generator) -> np.ndarray:
+        """Exponential-gap sampling, drawn in vectorized blocks."""
         if self.rate <= 0.0 or duration_s <= 0.0:
             return np.empty(0)
         # draw in blocks until we pass duration_s
@@ -84,6 +88,9 @@ class BurstyOnOff(ArrivalProcess):
         return rate_on, rate_off
 
     def times(self, duration_s: float, rng: np.random.Generator) -> np.ndarray:
+        """Alternate exponential ON/OFF holds (initial phase drawn from the
+        stationary duty cycle) and pour Poisson arrivals into each hold at
+        its phase rate."""
         if self.rate <= 0.0 or duration_s <= 0.0:
             return np.empty(0)
         rate_on, rate_off = self._phase_rates()
@@ -110,13 +117,24 @@ class BurstyOnOff(ArrivalProcess):
 
 @dataclass(frozen=True)
 class DiurnalProcess(ArrivalProcess):
-    """Sinusoidal daily profile: rate(t) = rate * (1 + amp*sin(2πt/period)).
+    """Sinusoidal daily profile: rate(t) = rate * (1 + amp*sin(2πt/period)),
+    floored at zero.
 
     Sampled by thinning against the peak rate (Lewis & Shedler), so the
-    stream is an exact nonhomogeneous Poisson process.
+    stream is an exact nonhomogeneous Poisson process; the profile wraps
+    seamlessly across period boundaries for any ``duration_s``.  With
+    ``amplitude`` <= 1 the trough rate is ``rate * (1 - amplitude)``;
+    amplitudes above 1 are allowed and clip the around-trough rate to zero
+    (a "dead of night" window with no arrivals at all).
     """
-    amplitude: float = 0.6              # in [0, 1)
+    amplitude: float = 0.6              # >= 0; > 1 clips the trough to zero
     period_s: float = 60.0              # compressed "day"
+
+    def __post_init__(self) -> None:
+        if self.amplitude < 0.0:
+            raise ValueError("amplitude must be >= 0 (use phase, not sign)")
+        if self.period_s <= 0.0:
+            raise ValueError("period_s must be positive")
 
     def times(self, duration_s: float, rng: np.random.Generator) -> np.ndarray:
         if self.rate <= 0.0 or duration_s <= 0.0:
@@ -125,8 +143,11 @@ class DiurnalProcess(ArrivalProcess):
         cand = PoissonProcess(lam_max).times(duration_s, rng)
         if cand.size == 0:
             return cand
-        lam = self.rate * (1.0 + self.amplitude
-                           * np.sin(2.0 * math.pi * cand / self.period_s))
+        # rate floor: amplitudes > 1 would otherwise go negative at the
+        # trough, which thinning would merely treat as 0 implicitly — make
+        # the floor explicit so the profile is well-defined
+        lam = np.maximum(0.0, self.rate * (1.0 + self.amplitude
+                         * np.sin(2.0 * math.pi * cand / self.period_s)))
         keep = rng.uniform(0.0, 1.0, size=cand.size) < lam / lam_max
         return cand[keep]
 
@@ -137,6 +158,8 @@ class TraceReplay(ArrivalProcess):
     trace: Tuple[float, ...] = ()
 
     def times(self, duration_s: float, rng: np.random.Generator) -> np.ndarray:
+        """Sort the recorded trace and clip it to the window; ``rng`` is
+        unused (replay is deterministic)."""
         ts = np.sort(np.asarray(self.trace, dtype=float))
         return ts[(ts >= 0.0) & (ts < duration_s)]
 

@@ -29,9 +29,31 @@ SILICON_USD_PER_MM2 = 0.10
 DRIVE_USD = 320.0                # the SSD itself
 
 
+DRIVES_PER_STORAGE_NODE = 16     # chassis share amortized across its drives
+
+
 def dsa_capex_usd(cfg: DSAConfig = DSAConfig()) -> float:
     return (NRE_USD / VOLUME + dsa_area_mm2(cfg) * SILICON_USD_PER_MM2
             + DRIVE_USD + 120.0)  # + board/controller
+
+
+def rental_rate_usd_per_s(plat: Platform, *, dsa_cfg=None) -> float:
+    """Amortized CAPEX of keeping one node provisioned, in $/s over the
+    3-year window (cloud-rental style: a powered-down server stops
+    accruing).  Electricity is OPEX and accounted separately from metered
+    energy.  CPU/GPU nodes carry the full ``HOST_SHARE_USD``; a DSCS drive
+    carries 1/``DRIVES_PER_STORAGE_NODE`` of it (many drives share one
+    storage chassis) on top of its ASIC-Clouds-amortized silicon.
+
+    This is what the autoscaling evaluation (:mod:`repro.core.autoscale`)
+    multiplies by powered server-seconds to price a fleet policy.
+    """
+    if plat.kind == "dsa":
+        capex = (dsa_capex_usd(dsa_cfg or DSAConfig())
+                 + HOST_SHARE_USD / DRIVES_PER_STORAGE_NODE)
+    else:
+        capex = plat.price_usd + HOST_SHARE_USD
+    return capex / T_SECONDS
 
 
 def cost_efficiency(lm: LatencyModel, plat: Platform, wl: Workload, *,

@@ -20,12 +20,33 @@ HOST_CPU_LIGHT_W = 45.0        # host while the DSA/NS device computes
 PCIE_PJ_PER_BIT = 5.0
 
 
+def compute_utilization(plat: Platform) -> float:
+    """Average device utilization while computing: systolic DSA/FPGA
+    dataflows keep more of the array busy than a cache-bound CPU/GPU."""
+    return 0.85 if plat.kind in ("dsa", "fpga") else 0.75
+
+
+def node_power_w(plat: Platform, busy: bool) -> float:
+    """Steady-state wall power of one powered fleet node.
+
+    Idle nodes draw ``plat.idle_w``; a node with a copy in service adds the
+    TDP-scaled utilization share — the same convention
+    :func:`pipeline_energy_j` applies to the compute phase.  This is the
+    per-server model the autoscaling evaluation
+    (:mod:`repro.core.autoscale`) integrates over busy/powered seconds;
+    powered-off servers draw nothing.
+    """
+    if not busy:
+        return plat.idle_w
+    return plat.idle_w + (plat.tdp_w - plat.idle_w) * compute_utilization(plat)
+
+
 def pipeline_energy_j(lm: LatencyModel, plat: Platform, wl: Workload, *,
                       batch: int = 1, q=0.5, dsa_cfg=None,
                       extra_accel_funcs: int = 0) -> Dict[str, float]:
     bd = lm.pipeline_breakdown(plat, wl, batch=batch, q=q, dsa_cfg=dsa_cfg,
                                extra_accel_funcs=extra_accel_funcs)
-    util = 0.85 if plat.kind in ("dsa", "fpga") else 0.75
+    util = compute_utilization(plat)
     e: Dict[str, float] = {}
     e["compute"] = bd["compute"] * (plat.idle_w +
                                     (plat.tdp_w - plat.idle_w) * util)

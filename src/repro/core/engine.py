@@ -63,6 +63,15 @@ reproducible and two engines with equal seeds emit identical
 ``benchmarks/bench_engine.py`` measures), and :class:`SampleBank` lets
 repeated runs share one sampling pass (common random numbers for the
 throughput binary search).
+
+Autoscaling (PR 3): ``run_soa(..., controller=...)`` steps a control loop
+at fixed epoch boundaries — the controller reads a :class:`FleetSnapshot`
+of the engine's live queue/utilization telemetry and resizes the active
+CPU subset and the powered drive set (powered-off drives wake with a
+modeled ``dscs_wake_s`` latency).  ``power_stats()`` reports busy/powered
+server-seconds for the energy/cost evaluation in
+:mod:`repro.core.autoscale`.  Without a controller every hook is inert and
+the event stream stays bit-identical to the PR-2 engine.
 """
 from __future__ import annotations
 
@@ -77,9 +86,10 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.arrivals import ArrivalProcess
-from repro.core.function import Pipeline
+from repro.core.function import Pipeline, is_acceleratable
 from repro.core.latency import LatencyModel, _erfinv
-from repro.core.platforms import PLATFORMS
+from repro.core.platforms import (CPU_FALLBACK_PLATFORM, DSCS_PLATFORM,
+                                  PLATFORMS)
 from repro.core.workloads import Workload
 
 
@@ -89,9 +99,11 @@ class Telemetry:
     counters: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
 
     def inc(self, name: str, v: float = 1.0) -> None:
+        """Add ``v`` to counter ``name`` (created at zero on first use)."""
         self.counters[name] += v
 
     def get(self, name: str) -> float:
+        """Current value of counter ``name`` (zero if never incremented)."""
         return self.counters[name]
 
 
@@ -200,6 +212,32 @@ class _ServiceSampler:
         return coef[0] + coef[1] * self._tr[i] + coef[2] * self._tw[i]
 
 
+@dataclass(frozen=True)
+class FleetSnapshot:
+    """What an autoscaling controller sees at one epoch boundary.
+
+    Built from the engine's own live telemetry — queue depths exclude
+    tombstoned (cancelled-in-queue) copies, busy counts are servers with a
+    copy in service, and ``arrivals``/``completions`` are deltas since the
+    previous epoch.  ``n_cpu_active`` / ``n_dscs_on`` are the *powered*
+    capacity the previous actions produced (waking drives count as on);
+    ``n_cpu_total`` / ``n_dscs_total`` are the provisioned maxima the
+    controller may scale within.
+    """
+    time: float                         # epoch boundary (simulated seconds)
+    epoch: int                          # 1-based epoch index
+    arrivals: int                       # arrivals since the previous epoch
+    completions: int                    # requests completed since then
+    dscs_queue: int                     # live queued DSCS copies, fleet-wide
+    cpu_queue: int                      # live queued CPU copies, fleet-wide
+    dscs_busy: int                      # drives with a copy in service
+    cpu_busy: int                       # CPU nodes with a copy in service
+    n_cpu_active: int                   # nodes eligible for new dispatch
+    n_dscs_on: int                      # powered (on or waking) drives
+    n_cpu_total: int
+    n_dscs_total: int
+
+
 @dataclass
 class RequestResult:
     """One completed request.  ``finish``/``accelerated`` describe the
@@ -219,10 +257,12 @@ class RequestResult:
 
     @property
     def latency(self) -> float:
+        """End-to-end latency of the winning copy (finish - arrival)."""
         return self.finish - self.arrival
 
     @property
     def queue_wait(self) -> float:
+        """Time the winning copy spent queued before service began."""
         return self.start - self.arrival
 
 
@@ -250,10 +290,12 @@ class EngineTrace:
 
     @property
     def n(self) -> int:
+        """Number of requests in the trace (= arrivals simulated)."""
         return int(self.arrival.size)
 
     @property
     def latency(self) -> np.ndarray:
+        """Per-request end-to-end latency vector (finish - arrival)."""
         return self.finish - self.arrival
 
     def to_results(self) -> List[RequestResult]:
@@ -343,7 +385,8 @@ class ClusterEngine:
                  latency_model: Optional[LatencyModel] = None,
                  hedge_budget_s: Optional[float] = None, seed: int = 0,
                  n_plain: int = 64,
-                 telemetry: Optional[Telemetry] = None):
+                 telemetry: Optional[Telemetry] = None,
+                 dscs_wake_s: float = 0.2):
         if n_cpu <= 0:
             raise ValueError("the fleet needs at least one CPU fallback node")
         self.n_dscs = n_dscs
@@ -353,8 +396,10 @@ class ClusterEngine:
         self.hedge_budget_s = hedge_budget_s
         self.seed = seed
         self.telemetry = telemetry if telemetry is not None else Telemetry()
+        self.dscs_wake_s = dscs_wake_s  # powered-off drive wake-up latency
         self._sampler = _ServiceSampler(self.lm)
         self._qstate: Optional[dict] = None
+        self._pstate: Optional[dict] = None
 
     def sample_bank(self, pipelines: Sequence[Pipeline]) -> SampleBank:
         """A :class:`SampleBank` for common-random-number runs."""
@@ -372,13 +417,28 @@ class ClusterEngine:
                 arrivals: Optional[ArrivalProcess] = None,
                 duration_s: float = 0.0,
                 times: Optional[np.ndarray] = None,
-                bank: Optional[SampleBank] = None) -> EngineTrace:
+                bank: Optional[SampleBank] = None,
+                controller=None) -> EngineTrace:
         """The batched event loop; returns the run as an
         :class:`EngineTrace`.
 
         ``times`` (a sorted arrival-time vector) overrides ``arrivals``;
         ``bank`` replays pre-sampled picks/service draws instead of the
         engine's own seed-derived streams (common random numbers).
+
+        ``controller`` attaches an autoscaling control loop (see
+        :mod:`repro.core.autoscale`): an object with an ``epoch_s`` period
+        and an ``observe(snapshot) -> action`` method.  At every epoch
+        boundary the engine hands it a :class:`FleetSnapshot` and applies
+        the returned action — resizing the *active* CPU subset (deactivated
+        nodes drain run-to-completion, then power off) and powering DSCS
+        drives up/down (a powered-off drive woken by an arrival, or
+        proactively by the controller, serves only after ``dscs_wake_s``).
+        Epoch boundaries fire before same-time dynamic events but after
+        same-time arrivals, and stop once the fleet has fully drained.
+        With ``controller=None`` none of this machinery runs and the event
+        stream is bit-identical to the pre-autoscaling engine (the
+        golden-trace gates pin this).
         """
         ss = np.random.SeedSequence(self.seed)
         arr_rng, rng = (np.random.default_rng(s) for s in ss.spawn(2))
@@ -406,12 +466,11 @@ class ClusterEngine:
 
         # -- vectorized pre-sampling ----------------------------------------
         nd, nc = self.n_dscs, self.n_cpu
-        coef_d = [sampler.coef(p.workload, "DSCS-Serverless")
+        coef_d = [sampler.coef(p.workload, DSCS_PLATFORM) for p in pipelines]
+        coef_c = [sampler.coef(p.workload, CPU_FALLBACK_PLATFORM)
                   for p in pipelines]
-        coef_c = [sampler.coef(p.workload, "Baseline-CPU") for p in pipelines]
         accel_pipe = np.array(
-            [nd > 0 and all(f.acceleratable for f in p.functions[:2])
-             for p in pipelines], dtype=bool)
+            [nd > 0 and is_acceleratable(p) for p in pipelines], dtype=bool)
         picks_l = picks.tolist()
         accel_l = (accel_pipe[picks].tolist() if n else [])
         drive_l = (_placement(nd, n).tolist() if nd and n else [-1] * n)
@@ -445,7 +504,8 @@ class ClusterEngine:
         hpush, hpop = heapq.heappush, heapq.heappop
         INF = math.inf
         hedge = self.hedge_budget_s
-        heap: List[tuple] = []          # (time, (rid << 1) | path)
+        heap: List[tuple] = []          # (time, (rid << 1) | path), or
+                                        # (time, -(drive + 1)) wake events
         hedge_dq: deque = deque()       # (time, rid): FIFO, arrival order
         end_t = 0.0                     # time of the last completion
         # the sampler's chunked draw stream, inlined: _grow() extends the
@@ -457,10 +517,44 @@ class ClusterEngine:
         t_ddisp = t_cdisp = t_hedge = 0
         t_won_d = t_won_c = t_srv_d = t_srv_c = 0
         t_can_q = t_can_s = t_tomb = 0
+        d_busy_s = c_busy_s = 0.0       # service-seconds per class
+
+        # -- autoscaling state (inert without a controller) ------------------
+        # The CPU pool scales by (de)activating a subset of the provisioned
+        # nc nodes: inactive nodes take no new dispatch, drain what they
+        # hold run-to-completion, then power off.  Drives power-cycle:
+        # d_power is 1 (on) / 2 (waking) / 0 (off); an arrival for an off
+        # drive starts a wake (the drive holds its queue, marked busy, and
+        # a wake event fires dscs_wake_s later).  Powered-seconds per class
+        # accumulate on power-off and finalize to the end-of-run horizon.
+        dyn = controller is not None
+        c_active = [True] * nc
+        n_c_active = nc
+        d_power = [1] * nd
+        n_d_on = nd
+        t_wake = ep_idx = 0
+        if dyn:
+            ep_s = float(controller.epoch_s)
+            if ep_s <= 0.0:
+                raise ValueError("controller.epoch_s must be positive")
+            ep_t = ep_s
+            wake_s = self.dscs_wake_s
+            n_waking = 0                # drives held busy by a pending wake
+            c_on_since = [0.0] * nc     # -1.0 once powered off
+            d_on_since = [0.0] * nd
+            # completed power-on intervals; kept as (start, stop) pairs so
+            # finalization can clip them to the end-of-run horizon (stale
+            # hedge timers / wake events let epochs fire past the last
+            # completion, and power-offs there must not inflate powered_s)
+            c_on_ivals: List[Tuple[float, float]] = []
+            d_on_ivals: List[Tuple[float, float]] = []
+            ep_last_ai = ep_last_done = 0
+        else:
+            ep_t = INF
 
         # -- dispatch helpers ------------------------------------------------
         def start_drive(d: int, t: float) -> None:
-            nonlocal t_tomb, s_i
+            nonlocal t_tomb, s_i, d_busy_s
             dq = d_queues[d]
             while dq:
                 r2 = dq.popleft()
@@ -478,13 +572,14 @@ class ClusterEngine:
                 s_i = i + 1
                 c = coef_d[picks_l[r2]]
                 svc = c[0] + c[1] * s_tr[i] + c[2] * s_tw[i]
+                d_busy_s += svc
                 d_start_a[r2] = t; d_svc_a[r2] = svc
                 d_busy[d] = 1
                 hpush(heap, (t + svc, r2 << 1))
                 return
 
         def start_cpu(node: int, t: float) -> None:
-            nonlocal t_tomb, s_i
+            nonlocal t_tomb, s_i, c_busy_s
             cq = c_queues[node]
             while cq:
                 r2 = cq.popleft()
@@ -503,19 +598,24 @@ class ClusterEngine:
                 s_i = i + 1
                 c = coef_c[picks_l[r2]]
                 svc = c[0] + c[1] * s_tr[i] + c[2] * s_tw[i]
+                c_busy_s += svc
                 c_start_a[r2] = t; c_svc_a[r2] = svc
                 c_busy[node] = 1
                 hpush(heap, (t + svc, (r2 << 1) | 1))
                 return
 
         def issue_cpu(rid: int, t: float) -> None:
-            nonlocal s_i
-            # least-loaded CPU node, lowest index on ties: lazy indexed heap
+            nonlocal s_i, c_busy_s
+            # least-loaded *active* CPU node, lowest index on ties: lazy
+            # indexed heap (inactive nodes' entries are popped on sight; an
+            # active node always holds its current entry — pushed on every
+            # load change and on reactivation — so the heap never runs dry
+            # while n_c_active >= 1, which the epoch handler guarantees)
             while True:
                 load, node = loadheap[0]
-                if c_load[node] == load:
+                if c_load[node] == load and c_active[node]:
                     break
-                hpop(loadheap)          # stale entry
+                hpop(loadheap)          # stale or deactivated entry
             c_node_l[rid] = node
             load += 1; c_load[node] = load
             hpush(loadheap, (load, node))
@@ -540,6 +640,7 @@ class ClusterEngine:
                 s_i = i + 1
                 c = coef_c[picks_l[rid]]
                 svc = c[0] + c[1] * s_tr[i] + c[2] * s_tw[i]
+                c_busy_s += svc
                 c_start_a[rid] = t; c_svc_a[rid] = svc
                 c_busy[node] = 1
                 hpush(heap, (t + svc, (rid << 1) | 1))
@@ -563,6 +664,77 @@ class ClusterEngine:
         while True:
             ft = heap[0][0] if heap else INF
             ht = hedge_dq[0][0] if hedge_dq else INF
+            if ep_t <= ft and ep_t <= ht and ep_t < next_t and (
+                    next_t != INF or heap or hedge_dq):
+                # epoch boundary: snapshot telemetry, apply the controller's
+                # action.  Fires before same-time dynamic events, after
+                # same-time arrivals, and stops once the fleet has drained.
+                t = ep_t
+                ep_idx += 1
+                done = t_srv_d + t_srv_c + t_won_d + t_won_c
+                act = controller.observe(FleetSnapshot(
+                    time=t, epoch=ep_idx,
+                    arrivals=ai - ep_last_ai,
+                    completions=done - ep_last_done,
+                    dscs_queue=sum(d_qd), cpu_queue=sum(c_qd),
+                    dscs_busy=sum(d_busy) - n_waking, cpu_busy=sum(c_busy),
+                    n_cpu_active=n_c_active, n_dscs_on=n_d_on,
+                    n_cpu_total=nc, n_dscs_total=nd))
+                ep_last_ai, ep_last_done = ai, done
+                if act is not None:
+                    # CPU pool: activate lowest-index first / deactivate
+                    # highest-index first (deterministic); a deactivated
+                    # node drains run-to-completion, then powers off
+                    want_c = min(nc, max(1, int(act.n_cpu)))
+                    if want_c > n_c_active:
+                        for node in range(nc):
+                            if n_c_active >= want_c:
+                                break
+                            if not c_active[node]:
+                                c_active[node] = True
+                                n_c_active += 1
+                                if c_on_since[node] < 0.0:
+                                    c_on_since[node] = t
+                                hpush(loadheap, (c_load[node], node))
+                    elif want_c < n_c_active:
+                        for node in range(nc - 1, -1, -1):
+                            if n_c_active <= want_c:
+                                break
+                            if c_active[node]:
+                                c_active[node] = False
+                                n_c_active -= 1
+                                if not c_busy[node] and not c_queues[node]:
+                                    c_on_ivals.append((c_on_since[node], t))
+                                    c_on_since[node] = -1.0
+                    # drives: power on lowest-index off drives (they wake,
+                    # serving after dscs_wake_s) / power off highest-index
+                    # idle drives (busy, waking or backlogged drives are
+                    # never yanked — best effort toward the target)
+                    want_d = min(nd, max(0, int(act.n_dscs_on)))
+                    if want_d > n_d_on:
+                        for d in range(nd):
+                            if n_d_on >= want_d:
+                                break
+                            if d_power[d] == 0:
+                                d_power[d] = 2
+                                n_d_on += 1
+                                n_waking += 1
+                                d_on_since[d] = t
+                                d_busy[d] = 1
+                                hpush(heap, (t + wake_s, -(d + 1)))
+                                t_wake += 1
+                    elif want_d < n_d_on:
+                        for d in range(nd - 1, -1, -1):
+                            if n_d_on <= want_d:
+                                break
+                            if (d_power[d] == 1 and not d_busy[d]
+                                    and not d_queues[d]):
+                                d_power[d] = 0
+                                n_d_on -= 1
+                                d_on_ivals.append((d_on_since[d], t))
+                                d_on_since[d] = -1.0
+                ep_t += ep_s
+                continue
             if ht <= ft:
                 if ht < next_t:         # hedge timer fires
                     t, rid = hedge_dq.popleft()
@@ -573,6 +745,15 @@ class ClusterEngine:
                     continue
             elif ft < next_t:           # a running copy finishes
                 t, code = hpop(heap)
+                if code < 0:            # wake event: drive is serviceable
+                    d = -code - 1
+                    assert d_power[d] == 2, "wake event for a non-waking drive"
+                    d_power[d] = 1
+                    d_busy[d] = 0
+                    n_waking -= 1
+                    if d_queues[d]:
+                        start_drive(d, t)
+                    continue
                 end_t = t
                 rid = code >> 1
                 if code & 1:            # CPU copy finished
@@ -604,6 +785,11 @@ class ClusterEngine:
                             t_srv_c += 1
                     if c_queues[node]:
                         start_cpu(node, t)
+                    if dyn and not c_active[node] and not c_busy[node] \
+                            and not c_queues[node] and c_on_since[node] >= 0.0:
+                        # deactivated node fully drained: power it off
+                        c_on_ivals.append((c_on_since[node], t))
+                        c_on_since[node] = -1.0
                 else:                   # DSCS copy finished
                     d = drive_l[rid]
                     d_busy[d] = 0
@@ -644,6 +830,18 @@ class ClusterEngine:
                 t_ddisp += 1
                 if hedge is not None:
                     hedge_dq.append((t + hedge, rid))
+                if dyn and d_power[d] == 0:
+                    # data lives on a powered-off drive: start its wake
+                    # (serviceable after dscs_wake_s) and queue the request
+                    # there; marking the drive busy routes this and any
+                    # later arrivals through the normal queue path below
+                    d_power[d] = 2
+                    n_d_on += 1
+                    n_waking += 1
+                    d_on_since[d] = t
+                    d_busy[d] = 1
+                    hpush(heap, (t + wake_s, -(d + 1)))
+                    t_wake += 1
                 if d_busy[d] or d_queues[d]:
                     d_area[d] += d_qd[d] * (t - d_last[d]); d_last[d] = t
                     d_queues[d].append(rid)
@@ -664,6 +862,7 @@ class ClusterEngine:
                     s_i = i + 1
                     c = coef_d[picks_l[rid]]
                     svc = c[0] + c[1] * s_tr[i] + c[2] * s_tw[i]
+                    d_busy_s += svc
                     d_start_a[rid] = t; d_svc_a[rid] = svc
                     d_busy[d] = 1
                     hpush(heap, (t + svc, rid << 1))
@@ -682,8 +881,31 @@ class ClusterEngine:
         # every enqueued hedge timer is eventually popped and every started
         # copy (= one sampler draw) finishes, so the count is exact
         events = (n + (s_i - sampler._i)
-                  + (t_ddisp if hedge is not None else 0))
+                  + (t_ddisp if hedge is not None else 0) + t_wake)
         sampler._i = s_i                # keep the sampler cursor consistent
+
+        # -- power accounting (busy/powered seconds per class) ---------------
+        if dyn:
+            # clip every powered interval to the common horizon: epochs can
+            # fire past the last completion (stale hedge timers, pending
+            # wakes), and neither a power-off there nor a still-open
+            # interval may contribute powered time beyond end_t
+            c_on_s = sum(max(0.0, min(b, end_t) - a) for a, b in c_on_ivals)
+            d_on_s = sum(max(0.0, min(b, end_t) - a) for a, b in d_on_ivals)
+            for ts0 in c_on_since:
+                if ts0 >= 0.0:
+                    c_on_s += max(0.0, end_t - ts0)
+            for ts0 in d_on_since:
+                if ts0 >= 0.0:
+                    d_on_s += max(0.0, end_t - ts0)
+        else:
+            c_on_s = end_t * nc
+            d_on_s = end_t * nd
+        self._pstate = {
+            "horizon": end_t,
+            "dscs": {"busy_s": d_busy_s, "powered_s": d_on_s, "n": nd},
+            "cpu": {"busy_s": c_busy_s, "powered_s": c_on_s, "n": nc},
+            "wake_events": t_wake, "epochs": ep_idx}
 
         # -- flush telemetry -------------------------------------------------
         inc = self.telemetry.inc
@@ -743,3 +965,20 @@ class ClusterEngine:
 
         return {"dscs": summarize(*self._qstate["dscs"]),
                 "cpu": summarize(*self._qstate["cpu"])}
+
+    def power_stats(self) -> Dict[str, object]:
+        """Busy/powered server-seconds per class from the last run.
+
+        ``busy_s`` sums every started copy's service time (including
+        run-to-completion hedge losers — they occupy their server);
+        ``powered_s`` sums each server's powered-on intervals, clipped to
+        the common end-of-run horizon.  Without an autoscaling controller
+        the whole provisioned fleet is powered for the whole run, so
+        ``powered_s = horizon * n``.  :mod:`repro.core.autoscale` turns
+        these into fleet energy and cost.
+        """
+        if self._pstate is None:
+            zero = {"busy_s": 0.0, "powered_s": 0.0, "n": 0}
+            return {"horizon": 0.0, "dscs": dict(zero), "cpu": dict(zero),
+                    "wake_events": 0, "epochs": 0}
+        return self._pstate

@@ -39,6 +39,16 @@ class Pipeline:
         assert len(seen) == len(self.edges), "duplicate edge"
 
 
+def is_acceleratable(pipeline: Pipeline) -> bool:
+    """True when the pipeline's offloadable prefix (f1 preprocess + f2
+    inference — the functions DSCS executes in-storage, Fig. 2) carries
+    the ``acceleratable`` hint; f3 notify always runs host-side.  This is
+    THE dispatch predicate: the engine routes exactly these pipelines to
+    drives, and capacity planners (``EWMAPolicy.for_pipelines``) must
+    split traffic with the same rule."""
+    return all(f.acceleratable for f in pipeline.functions[:2])
+
+
 def standard_pipeline(workload_name: str, accelerate: bool = True) -> Pipeline:
     """The Fig. 2 three-function chain for a Table I workload."""
     wl = WORKLOADS[workload_name]

@@ -84,6 +84,11 @@ PLATFORMS = {p.name: p for p in (
     XEON_8275CL, RTX_2080TI, ALVEO_U280,
     NS_ARM_A57, NS_JETSON_TX2, NS_SMARTSSD_FPGA, DSA_CSD)}
 
+# canonical platform names for the two fleet roles the cluster engine and
+# the autoscaling evaluation share (one definition, not scattered literals)
+CPU_FALLBACK_PLATFORM = XEON_8275CL.name
+DSCS_PLATFORM = DSA_CSD.name
+
 PCIE_GBPS = {  # effective (post-overhead) unidirectional bandwidth
     "gen3x1": 0.85e9, "gen3x2": 1.7e9, "gen3x4": 3.4e9, "gen3x8": 6.8e9,
     "gen3x16": 13.6e9, "gen4x8": 13.6e9, "gen4x16": 27.2e9, "gen3x32": 27.2e9,

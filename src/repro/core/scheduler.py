@@ -16,6 +16,11 @@ the engine's event loop:
     a second copy is issued on the least-loaded CPU node, both copies race,
     the earlier finisher wins and the loser is cancelled (tail/straggler
     mitigation — our addition, evaluated in fig16)
+  * autoscaling: ``run_autoscaled`` attaches an
+    :class:`~repro.core.autoscale.AutoscalePolicy` control loop that
+    resizes the active fleet at epoch boundaries and scores the run on
+    cost per SLA-met request and energy per request (fig20); the policy
+    classes are re-exported here as the public API
 
 Every run is reproducible from the constructor seed: repeated ``run``
 calls on one ``ClusterSim`` (and two sims built with equal seeds) produce
@@ -29,13 +34,19 @@ from typing import List, Optional
 import numpy as np
 
 from repro.core.arrivals import ArrivalProcess, PoissonProcess
+from repro.core.autoscale import (AutoscaleAction,  # noqa: F401
+                                  AutoscalePolicy, AutoscaleReport,
+                                  EWMAPolicy, ReactivePolicy, StaticPolicy,
+                                  evaluate_policy)
 from repro.core.engine import (ClusterEngine, EngineTrace,  # noqa: F401
-                               RequestResult, Telemetry)
+                               FleetSnapshot, RequestResult, Telemetry)
 from repro.core.function import Pipeline
 from repro.core.latency import LatencyModel
 from repro.core.placement import StoragePool
 
-__all__ = ["ClusterSim", "RequestResult", "Telemetry"]
+__all__ = ["AutoscaleAction", "AutoscalePolicy", "AutoscaleReport",
+           "ClusterSim", "EWMAPolicy", "FleetSnapshot", "ReactivePolicy",
+           "RequestResult", "StaticPolicy", "Telemetry"]
 
 
 class ClusterSim:
@@ -79,6 +90,26 @@ class ClusterSim:
     def queue_stats(self):
         """Queue-depth telemetry from the most recent ``run``."""
         return self.engine.queue_stats()
+
+    # -- autoscaling (ROADMAP item; see repro.core.autoscale) ----------------
+    def run_autoscaled(self, pipelines: List[Pipeline], *,
+                       policy: AutoscalePolicy, arrivals: ArrivalProcess,
+                       duration_s: float, sla_s: float = 0.6,
+                       dscs_wake_s: float = 0.2) -> AutoscaleReport:
+        """Run ``duration_s`` of offered load with ``policy`` resizing the
+        fleet at its epoch boundaries, and score the run on cost per
+        SLA-met request and energy per request.
+
+        The sim's ``n_dscs``/``n_cpu`` become the provisioned maxima the
+        policy scales within; the run uses a fresh engine with this sim's
+        seed/latency model, so it neither consumes nor disturbs the sim's
+        own telemetry, and repeated calls are exactly reproducible.
+        """
+        return evaluate_policy(
+            policy, pipelines, arrivals=arrivals, duration_s=duration_s,
+            n_dscs=self.n_dscs, n_cpu=self.n_cpu, sla_s=sla_s,
+            hedge_budget_s=self.hedge_budget_s, seed=self.seed,
+            latency_model=self.lm, dscs_wake_s=dscs_wake_s)
 
     # -- throughput under SLA (Fig. 12 methodology) ------------------------
     def max_throughput(self, pipelines: List[Pipeline], *, sla_s: float,

@@ -1,0 +1,381 @@
+"""Autoscaling control loop: no-controller bit-exactness, dynamic CPU
+pool, drive power cycling with wake latency, power/cost/energy accounting,
+queue_stats under mid-run fleet changes, and the fig20 acceptance claim
+(reactive and EWMA beat the static fleet on cost per SLA-met request under
+diurnal load)."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.arrivals import DiurnalProcess, PoissonProcess, TraceReplay
+from repro.core.autoscale import (AutoscaleAction, AutoscalePolicy,
+                                  EWMAPolicy, ReactivePolicy, StaticPolicy,
+                                  evaluate_policy, fleet_cost_usd,
+                                  fleet_energy_j)
+from repro.core.engine import ClusterEngine
+from repro.core.function import standard_pipeline
+from repro.core.latency import LatencyModel
+from repro.core.scheduler import ClusterSim
+
+PIPES = [standard_pipeline("asset_damage"),
+         standard_pipeline("content_moderation", accelerate=False)]
+ACCEL = [standard_pipeline("asset_damage")]
+
+
+class _Recorder(AutoscalePolicy):
+    """Delegate to an inner policy, recording every snapshot it saw."""
+
+    def __init__(self, inner):
+        self.inner = inner
+        self.epoch_s = inner.epoch_s
+        self.snaps = []
+
+    def reset(self):
+        self.snaps = []
+        self.inner.reset()
+
+    def observe(self, snap):
+        self.snaps.append(snap)
+        return self.inner.observe(snap)
+
+
+class _Fixed(AutoscalePolicy):
+    """Request the same action every epoch (no clamping of its own)."""
+
+    def __init__(self, n_cpu, n_dscs_on, epoch_s=1.0):
+        self.action = AutoscaleAction(n_cpu, n_dscs_on)
+        self.epoch_s = epoch_s
+
+    def observe(self, snap):
+        return self.action
+
+
+# --------------------------------------------------------------------------
+# the golden-trace property: a controller must be able to ride along
+# without perturbing the simulation it merely observes
+# --------------------------------------------------------------------------
+
+def test_full_fleet_static_policy_is_bit_identical_to_no_controller():
+    """Epoch hooks + the full-fleet static action change no scheduling
+    decision, so the RequestResult stream must be bit-identical to a run
+    without any controller (the golden-trace gates stay meaningful)."""
+    kw = dict(n_dscs=4, n_cpu=8, hedge_budget_s=0.05, seed=13)
+    arr = PoissonProcess(rate=80.0)
+    plain = ClusterEngine(**kw).run(PIPES, arrivals=arr, duration_s=8)
+    eng = ClusterEngine(**kw)
+    scaled = eng.run_soa(PIPES, arrivals=arr, duration_s=8,
+                         controller=StaticPolicy(8, 4, epoch_s=0.5))
+    assert scaled.to_results() == plain
+    assert eng.power_stats()["epochs"] > 0
+
+
+def test_observer_only_policy_sees_consistent_telemetry():
+    rec = _Recorder(StaticPolicy(8, 4, epoch_s=1.0))
+    eng = ClusterEngine(n_dscs=4, n_cpu=8, hedge_budget_s=0.05, seed=0)
+    trace = eng.run_soa(PIPES, arrivals=PoissonProcess(rate=60.0),
+                        duration_s=6, controller=rec)
+    assert rec.snaps, "epochs must fire"
+    assert [s.epoch for s in rec.snaps] == list(range(1, len(rec.snaps) + 1))
+    assert all(s.time == pytest.approx(s.epoch * 1.0) for s in rec.snaps)
+    # per-epoch arrival deltas sum to at most the total stream (the tail
+    # after the last boundary is never reported) and every count is sane
+    assert sum(s.arrivals for s in rec.snaps) <= trace.n
+    for s in rec.snaps:
+        assert 0 <= s.cpu_busy <= s.n_cpu_active <= s.n_cpu_total == 8
+        assert 0 <= s.dscs_busy <= s.n_dscs_on <= s.n_dscs_total == 4
+        assert s.dscs_queue >= 0 and s.cpu_queue >= 0
+
+
+# --------------------------------------------------------------------------
+# dynamic CPU pool
+# --------------------------------------------------------------------------
+
+def test_cpu_scale_down_powers_off_and_reduces_powered_seconds():
+    eng = ClusterEngine(n_dscs=0, n_cpu=8, seed=0)
+    eng.run_soa(PIPES, arrivals=PoissonProcess(rate=20.0), duration_s=10,
+                controller=_Fixed(2, 0))
+    ps = eng.power_stats()
+    full = ps["horizon"] * 8
+    assert 0.0 < ps["cpu"]["powered_s"] < 0.5 * full
+    assert ps["cpu"]["busy_s"] <= ps["cpu"]["powered_s"] + 1e-9
+
+
+def test_cpu_pool_never_drops_below_one_and_every_request_completes():
+    """A policy demanding zero CPUs is clamped; the fleet still serves."""
+    eng = ClusterEngine(n_dscs=0, n_cpu=4, seed=0)
+    trace = eng.run_soa(PIPES, arrivals=PoissonProcess(rate=30.0),
+                        duration_s=6, controller=_Fixed(0, 0))
+    assert trace.n > 0
+    assert np.all(np.isfinite(trace.finish))
+    assert np.all(trace.winner == 1)
+
+
+def test_deactivated_node_drains_run_to_completion():
+    """Shrinking the pool must not drop queued or running work: every
+    arrival still gets exactly one result, in arrival order."""
+    eng = ClusterEngine(n_dscs=2, n_cpu=8, hedge_budget_s=0.05, seed=7)
+    trace = eng.run_soa(PIPES, arrivals=PoissonProcess(rate=120.0),
+                        duration_s=8, controller=_Fixed(1, 1))
+    assert trace.n > 0
+    assert np.all(np.isfinite(trace.finish))
+    assert np.all(trace.finish >= trace.arrival)
+
+
+def test_mid_run_fleet_change_queue_stats_hand_computed():
+    """queue_stats under a mid-run fleet-size change: two simultaneous
+    arrivals after node 1 was deactivated must share node 0 (one queues),
+    and the depth integral/horizon bookkeeping must hold exactly."""
+    eng = ClusterEngine(n_dscs=0, n_cpu=2, seed=0)
+    res = eng.run_soa(
+        [standard_pipeline("asset_damage")],
+        times=np.array([0.0, 0.0, 2.0, 2.0]),
+        controller=_Fixed(1, 0)).to_results()
+    assert len(res) == 4
+    r = sorted(res, key=lambda x: (x.arrival, x.start))
+    # t=0: rid0 -> node0, rid1 -> node1 (both idle).  Epoch t=1 drops to
+    # one active node.  t=2: rid2 starts on node0, rid3 queues behind it.
+    assert r[2].queue_wait == 0.0
+    assert r[3].start == pytest.approx(r[2].finish)
+    q = eng.queue_stats()["cpu"]
+    horizon = max(x.finish for x in res)
+    assert q["max_depth"] == 1.0
+    want_mean = (r[3].start - r[3].arrival) / (2.0 * horizon)
+    assert q["mean_depth"] == pytest.approx(want_mean, abs=1e-12)
+    # node 1 drained by the epoch, so it powered off at t=1.0 exactly
+    ps = eng.power_stats()
+    assert ps["cpu"]["powered_s"] == pytest.approx(horizon + 1.0)
+
+
+def test_reactivated_node_takes_new_work():
+    """Scale 4 -> 1 -> 4: after re-activation the spread of simultaneous
+    arrivals across nodes is restored (no queueing), proving reactivated
+    nodes rejoin the least-loaded pick."""
+    class UpDown(AutoscalePolicy):
+        epoch_s = 1.0
+
+        def observe(self, snap):
+            return AutoscaleAction(1 if snap.epoch < 2 else 4, 0)
+
+    eng = ClusterEngine(n_dscs=0, n_cpu=4, seed=0)
+    res = eng.run_soa([standard_pipeline("asset_damage")],
+                      times=np.array([0.5, 3.0, 3.0, 3.0, 3.0]),
+                      controller=UpDown()).to_results()
+    late = [r for r in res if r.arrival == 3.0]
+    assert len(late) == 4
+    assert all(r.queue_wait == 0.0 for r in late)
+
+
+# --------------------------------------------------------------------------
+# drive power cycling + wake latency
+# --------------------------------------------------------------------------
+
+def test_powered_off_drive_pays_wake_latency_on_arrival():
+    wake = 0.3
+    eng = ClusterEngine(n_dscs=2, n_cpu=2, seed=0, dscs_wake_s=wake)
+    res = eng.run_soa(ACCEL, times=np.array([2.0]),
+                      controller=_Fixed(1, 0)).to_results()
+    r = res[0]
+    assert r.winner == "dscs"
+    # drives idle from t=0 were powered off at the first epoch; the t=2
+    # arrival wakes its placement drive and waits out the full penalty
+    assert r.start == pytest.approx(2.0 + wake)
+    ps = eng.power_stats()
+    assert ps["wake_events"] == 1
+
+
+def test_wake_latency_absent_when_drive_stays_on():
+    eng = ClusterEngine(n_dscs=2, n_cpu=2, seed=0, dscs_wake_s=0.3)
+    res = eng.run_soa(ACCEL, times=np.array([2.0]),
+                      controller=_Fixed(1, 2)).to_results()
+    assert res[0].winner == "dscs"
+    assert res[0].queue_wait == 0.0
+    assert eng.power_stats()["wake_events"] == 0
+
+
+def test_hedging_races_the_waking_drive():
+    """With a hedge budget shorter than the wake penalty, the CPU copy
+    must win the race for a request landing on a sleeping drive."""
+    eng = ClusterEngine(n_dscs=2, n_cpu=2, seed=0, dscs_wake_s=1.0,
+                        hedge_budget_s=0.05)
+    res = eng.run_soa(ACCEL, times=np.array([2.0]),
+                      controller=_Fixed(2, 0)).to_results()
+    r = res[0]
+    assert r.hedged and r.winner == "cpu"
+    assert r.finish - r.arrival < 1.0     # did not wait out the wake
+
+
+def test_proactive_power_up_prewarms_drives():
+    """A policy that powers drives back on ahead of load: an arrival after
+    the wake completes pays no penalty."""
+    class PreWarm(AutoscalePolicy):
+        epoch_s = 1.0
+
+        def observe(self, snap):
+            # off at epoch 1, wake (proactively) at epoch 2
+            return AutoscaleAction(1, 0 if snap.epoch < 2 else 2)
+
+    eng = ClusterEngine(n_dscs=2, n_cpu=2, seed=0, dscs_wake_s=0.3)
+    res = eng.run_soa(ACCEL, times=np.array([4.0]),
+                      controller=PreWarm()).to_results()
+    assert res[0].winner == "dscs"
+    assert res[0].queue_wait == 0.0       # wake finished at 2.3 < 4.0
+    assert eng.power_stats()["wake_events"] == 2
+
+
+def test_powered_down_fleet_consumes_less_energy():
+    lm = LatencyModel()
+    arr = PoissonProcess(rate=10.0)
+    kw = dict(arrivals=arr, duration_s=10, n_dscs=4, n_cpu=8, sla_s=0.6,
+              seed=0, latency_model=lm)
+    full = evaluate_policy(StaticPolicy(8, 4), PIPES, **kw)
+    lean = evaluate_policy(StaticPolicy(1, 1), PIPES, **kw)
+    assert lean.energy_j < full.energy_j
+    assert lean.cost_usd < full.cost_usd
+    assert lean.mean_cpu_active < full.mean_cpu_active
+
+
+# --------------------------------------------------------------------------
+# report accounting
+# --------------------------------------------------------------------------
+
+def test_static_full_fleet_power_accounting_closed_form():
+    eng = ClusterEngine(n_dscs=2, n_cpu=4, seed=0)
+    eng.run_soa(PIPES, arrivals=PoissonProcess(rate=30.0), duration_s=5,
+                controller=StaticPolicy(4, 2))
+    ps = eng.power_stats()
+    assert ps["cpu"]["powered_s"] == pytest.approx(ps["horizon"] * 4)
+    assert ps["dscs"]["powered_s"] == pytest.approx(ps["horizon"] * 2)
+    energy = fleet_energy_j(ps)
+    cost = fleet_cost_usd(ps, energy["total"])
+    assert energy["total"] == pytest.approx(energy["cpu"] + energy["dscs"])
+    assert cost["total"] == pytest.approx(
+        cost["cpu_capex"] + cost["dscs_capex"] + cost["electricity"])
+    assert energy["total"] > 0 and cost["total"] > 0
+
+
+def test_evaluate_policy_is_deterministic():
+    lm = LatencyModel()
+    kw = dict(arrivals=DiurnalProcess(rate=60.0, period_s=20.0),
+              duration_s=20, n_dscs=4, n_cpu=12, sla_s=0.6,
+              hedge_budget_s=0.08, seed=3, latency_model=lm)
+    a = evaluate_policy(ReactivePolicy(), PIPES, **kw)
+    b = evaluate_policy(ReactivePolicy(), PIPES, **kw)
+    assert a == b
+    # a reused policy object is reset between runs
+    pol = EWMAPolicy.for_pipelines(lm, PIPES)
+    assert (evaluate_policy(pol, PIPES, **kw)
+            == evaluate_policy(pol, PIPES, **kw))
+
+
+def test_run_autoscaled_facade_matches_direct_evaluation():
+    lm = LatencyModel()
+    sim = ClusterSim(n_dscs=4, n_cpu=12, hedge_budget_s=0.08, seed=3,
+                     latency_model=lm)
+    arr = DiurnalProcess(rate=60.0, period_s=20.0)
+    rep = sim.run_autoscaled(PIPES, policy=ReactivePolicy(), arrivals=arr,
+                             duration_s=20)
+    want = evaluate_policy(ReactivePolicy(), PIPES, arrivals=arr,
+                           duration_s=20, n_dscs=4, n_cpu=12, sla_s=0.6,
+                           hedge_budget_s=0.08, seed=3, latency_model=lm)
+    assert rep == want
+    assert rep.n_requests > 0 and rep.epochs > 0
+
+
+# --------------------------------------------------------------------------
+# the fig20 acceptance claim, at tier-1 scale
+# --------------------------------------------------------------------------
+
+def test_adaptive_policies_beat_static_on_cost_per_sla_met_request():
+    """Under the diurnal process, reactive and EWMA must deliver a lower
+    cost per SLA-met request than the peak-provisioned static fleet while
+    keeping SLA attainment within a whisker of it (fig20's criterion)."""
+    lm = LatencyModel()
+    kw = dict(arrivals=DiurnalProcess(rate=120.0, amplitude=0.6,
+                                      period_s=30.0),
+              duration_s=60, n_dscs=8, n_cpu=24, sla_s=0.6,
+              hedge_budget_s=0.08, seed=0, latency_model=lm)
+    static = evaluate_policy(StaticPolicy(24, 8), PIPES, **kw)
+    reactive = evaluate_policy(ReactivePolicy(), PIPES, **kw)
+    ewma = evaluate_policy(EWMAPolicy.for_pipelines(lm, PIPES), PIPES, **kw)
+    assert static.sla_frac > 0.95
+    for adaptive in (reactive, ewma):
+        assert adaptive.cost_per_sla_req_usd < static.cost_per_sla_req_usd
+        assert adaptive.sla_frac > static.sla_frac - 0.05
+        assert adaptive.energy_per_req_j < static.energy_per_req_j
+        # the saving comes from actually shrinking the powered fleet
+        assert adaptive.mean_cpu_active < static.mean_cpu_active
+
+
+def test_ewma_policy_tracks_rate_and_static_never_moves():
+    rec_s = _Recorder(StaticPolicy(12, 4))
+    rec_e = _Recorder(EWMAPolicy.for_pipelines(LatencyModel(), PIPES))
+    arr = DiurnalProcess(rate=80.0, amplitude=0.8, period_s=20.0)
+    for rec in (rec_s, rec_e):
+        ClusterEngine(n_dscs=4, n_cpu=12, seed=0).run_soa(
+            PIPES, arrivals=arr, duration_s=40, controller=rec)
+    assert len({s.n_cpu_active for s in rec_s.snaps}) == 1
+    # the EWMA fleet breathes with the profile
+    sizes = {s.n_cpu_active for s in rec_e.snaps}
+    assert len(sizes) > 2
+    assert min(sizes) < 12
+
+
+def test_powered_seconds_clipped_to_horizon_despite_late_epochs():
+    """A stale hedge timer keeps the loop alive long after the last
+    completion, so epochs (and power-offs) fire past the horizon — the
+    powered-seconds accounting must clip every interval to the horizon
+    and never report more than horizon * fleet."""
+    eng = ClusterEngine(n_dscs=2, n_cpu=4, seed=0, hedge_budget_s=5.0)
+    res = eng.run_soa(ACCEL, times=np.array([0.1]),
+                      controller=_Fixed(1, 0)).to_results()
+    ps = eng.power_stats()
+    horizon = ps["horizon"]
+    assert horizon == pytest.approx(res[0].finish)
+    # epochs kept firing until the stale timer drained at t ~ 5.1,
+    # well past the ~0.14 s horizon
+    assert ps["epochs"] >= 5
+    assert ps["cpu"]["powered_s"] == pytest.approx(horizon * 4)
+    assert ps["dscs"]["powered_s"] <= horizon * 2 + 1e-12
+
+
+def test_snapshot_does_not_count_waking_drives_as_busy():
+    """A drive mid-wake holds no copy in service; FleetSnapshot.dscs_busy
+    must exclude it (it still counts as powered via n_dscs_on)."""
+    rec = _Recorder(_Fixed(1, 0))
+    eng = ClusterEngine(n_dscs=2, n_cpu=2, seed=0, dscs_wake_s=2.0)
+    eng.run_soa(ACCEL, times=np.array([1.5]), controller=rec)
+    mid_wake = [s for s in rec.snaps if 1.5 < s.time < 3.5]
+    assert mid_wake, "an epoch must fire during the 2 s wake"
+    for s in mid_wake:
+        assert s.n_dscs_on == 1         # powered (waking) ...
+        assert s.dscs_busy == 0         # ... but serving nothing yet
+
+
+def test_policy_validation():
+    class Bad(AutoscalePolicy):
+        epoch_s = 0.0
+
+        def observe(self, snap):
+            return None
+
+    with pytest.raises(ValueError):
+        ClusterEngine(n_dscs=1, n_cpu=1, seed=0).run_soa(
+            ACCEL, times=np.array([1.0]), controller=Bad())
+    with pytest.raises(NotImplementedError):
+        AutoscalePolicy().observe(None)
+
+
+def test_none_action_leaves_fleet_untouched():
+    class Watch(AutoscalePolicy):
+        epoch_s = 1.0
+
+        def observe(self, snap):
+            return None
+
+    kw = dict(n_dscs=2, n_cpu=4, seed=5)
+    arr = PoissonProcess(rate=40.0)
+    plain = ClusterEngine(**kw).run(PIPES, arrivals=arr, duration_s=5)
+    watched = ClusterEngine(**kw).run_soa(
+        PIPES, arrivals=arr, duration_s=5, controller=Watch()).to_results()
+    assert watched == plain

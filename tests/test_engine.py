@@ -3,6 +3,7 @@ data-aware placement, the arrival-process library, and golden-trace
 equivalence of the array-backed hot path against the frozen pre-PR2
 reference engine."""
 import json
+import math
 import pathlib
 
 import numpy as np
@@ -332,6 +333,52 @@ def test_arrivals_sorted_deterministic_and_rate_calibrated(proc, horizon):
                                              np.random.default_rng(1)))
     # long-run mean rate within 20% of nominal
     assert 0.8 * 200 * horizon < ts.size < 1.2 * 200 * horizon
+
+
+def test_diurnal_period_wraparound():
+    """The sinusoidal profile must wrap seamlessly across period
+    boundaries: per-period counts stay near the mean, and every period's
+    peak half out-draws its trough half."""
+    proc = DiurnalProcess(rate=300.0, amplitude=0.8, period_s=10.0)
+    ts = proc.times(50.0, np.random.default_rng(7))    # five full periods
+    per_period = np.histogram(ts, bins=np.arange(0.0, 51.0, 10.0))[0]
+    assert per_period.size == 5
+    # each period offers ~rate*period on average regardless of phase
+    assert np.all(per_period > 0.7 * 3000) and np.all(per_period < 1.3 * 3000)
+    for k in range(5):
+        base = 10.0 * k
+        peak = np.count_nonzero((ts >= base) & (ts < base + 5.0))
+        trough = np.count_nonzero((ts >= base + 5.0) & (ts < base + 10.0))
+        assert peak > trough, f"period {k}: peak half must out-draw trough"
+
+
+def test_diurnal_rate_floor_at_trough():
+    """Amplitude > 1 clips the instantaneous rate at zero: the dead-of-
+    night window where 1 + amp*sin(2πt/P) <= 0 must hold no arrivals at
+    all, while the stream stays sorted, in-window and rate-positive."""
+    proc = DiurnalProcess(rate=400.0, amplitude=1.5, period_s=10.0)
+    ts = proc.times(30.0, np.random.default_rng(0))
+    assert ts.size > 0
+    assert np.all(np.diff(ts) >= 0.0)
+    assert np.all((ts >= 0.0) & (ts < 30.0))
+    phase = np.sin(2.0 * math.pi * ts / 10.0)
+    assert np.all(1.0 + 1.5 * phase > 0.0), \
+        "arrivals appeared inside the clipped zero-rate window"
+    # clipping removes the negative lobe, so the realized mean rate must
+    # match the *floored* profile's mean (above the nominal parameter),
+    # not the unclipped sinusoid's
+    theta = np.linspace(0.0, 2.0 * math.pi, 20000, endpoint=False)
+    clipped_mean = 400.0 * float(
+        np.mean(np.maximum(0.0, 1.0 + 1.5 * np.sin(theta))))
+    assert clipped_mean > 400.0
+    assert 0.85 * clipped_mean * 30 < ts.size < 1.15 * clipped_mean * 30
+
+
+def test_diurnal_parameter_validation():
+    with pytest.raises(ValueError):
+        DiurnalProcess(rate=10.0, amplitude=-0.1)
+    with pytest.raises(ValueError):
+        DiurnalProcess(rate=10.0, period_s=0.0)
 
 
 def test_trace_replay_exact_and_unscalable():

@@ -1,0 +1,81 @@
+#!/usr/bin/env python
+"""Documentation gate (CI docs job).
+
+Two checks over ``README.md`` and ``docs/*.md``:
+
+1. **Relative links resolve** — every ``[text](target)`` markdown link
+   that is not an absolute URL or a pure in-page anchor must point at an
+   existing file/directory, resolved against the linking file's location
+   (URL fragments are stripped first).
+2. **Doctests pass** — any file containing ``>>>`` examples is run
+   through :mod:`doctest` (``src/`` is prepended to ``sys.path``, so the
+   examples import the package exactly like the test suite does).
+
+Exit status is nonzero on any broken link or failing example:
+
+    python tools/check_docs.py
+"""
+from __future__ import annotations
+
+import doctest
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "src"))
+
+# [text](target) — excludes images' leading "!" capture on purpose: image
+# targets must resolve too, and the regex matches them the same way
+_LINK = re.compile(r"\[[^\]\[]*\]\(([^)\s]+)\)")
+
+
+def doc_files() -> list[Path]:
+    files = [REPO / "README.md"]
+    files += sorted((REPO / "docs").glob("*.md"))
+    return [f for f in files if f.exists()]
+
+
+def check_links(path: Path) -> list[str]:
+    errors = []
+    text = path.read_text()
+    for m in _LINK.finditer(text):
+        target = m.group(1)
+        if re.match(r"^[a-z][a-z0-9+.-]*:", target):    # http:, mailto:, ...
+            continue
+        if target.startswith("#"):                      # in-page anchor
+            continue
+        rel = target.split("#", 1)[0]
+        if not (path.parent / rel).exists():
+            errors.append(f"{path.relative_to(REPO)}: broken link -> {target}")
+    return errors
+
+
+def run_doctests(path: Path) -> list[str]:
+    if ">>>" not in path.read_text():
+        return []
+    failures, tests = doctest.testfile(
+        str(path), module_relative=False, verbose=False,
+        optionflags=doctest.NORMALIZE_WHITESPACE | doctest.ELLIPSIS)
+    print(f"{path.relative_to(REPO)}: {tests} doctest examples, "
+          f"{failures} failures")
+    if failures:
+        return [f"{path.relative_to(REPO)}: {failures} doctest failures"]
+    return []
+
+
+def main() -> int:
+    errors = []
+    for f in doc_files():
+        errors += check_links(f)
+    for f in doc_files():
+        errors += run_doctests(f)
+    for e in errors:
+        print(f"ERROR: {e}", file=sys.stderr)
+    if not errors:
+        print(f"docs OK: {len(doc_files())} files checked")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
