@@ -7,6 +7,7 @@ or a JSON array of ``{name, value, derived}`` rows with ``--json``.
     python -m benchmarks.run --only fig19     # one figure family
     python -m benchmarks.run --list           # enumerate figures
     python -m benchmarks.run --only fig12 --json   # machine-readable rows
+    python -m benchmarks.run --only fig21 --smoke --json  # CI fast path
 """
 from __future__ import annotations
 
@@ -83,6 +84,7 @@ def _roofline_summary():
 
 
 def main(argv=None) -> None:
+    from benchmarks import figures as figures_mod
     from benchmarks.figures import ALL_FIGURES
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--only", default="",
@@ -91,7 +93,13 @@ def main(argv=None) -> None:
                     help="print figure names and exit")
     ap.add_argument("--json", action="store_true", dest="as_json",
                     help="emit a JSON array of rows instead of CSV")
+    ap.add_argument("--smoke", action="store_true",
+                    help="shrink expensive simulation figures to the "
+                         "CI-sized fast path (same structure and "
+                         "acceptance ratios)")
     args = ap.parse_args(argv)
+    if args.smoke:
+        figures_mod.SMOKE = True
     figures = [f for f in ALL_FIGURES
                if args.only.lower() in f.__name__.lower()]
     if args.list_figs:

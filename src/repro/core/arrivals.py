@@ -12,6 +12,9 @@ benchmark sweeps and the examples share:
   * ``DiurnalProcess``   — nonhomogeneous Poisson with a sinusoidal rate
                            profile (thinning / Lewis-Shedler sampling)
   * ``TraceReplay``      — deterministic replay of recorded arrival times
+  * ``MergedArrivals``   — deterministic multiplexer of independent
+                           component streams (one per tenant), with
+                           per-arrival source attribution
 
 Every process draws exclusively from the ``numpy.random.Generator`` handed
 to :meth:`times`, so a single engine seed reproduces the full arrival
@@ -154,13 +157,28 @@ class DiurnalProcess(ArrivalProcess):
 
 @dataclass(frozen=True)
 class TraceReplay(ArrivalProcess):
-    """Replay recorded arrival times verbatim (rate is informational)."""
+    """Replay recorded arrival times verbatim (rate is informational and
+    defaults to 0.0 — replay has no free rate parameter).
+
+    ``trace`` accepts any sequence of times (tuple, list, or a numpy
+    vector straight from another process's :meth:`times` output) and is
+    normalized to a tuple of Python floats at construction, so the replay
+    round-trips another generator's stream without re-quantization: each
+    ``numpy.float64`` converts to the bit-identical IEEE-754 double, and
+    an engine run fed the replay reproduces the original run exactly
+    (tested in ``tests/test_engine.py``).
+    """
+    rate: float = 0.0
     trace: Tuple[float, ...] = ()
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "trace",
+                           tuple(float(t) for t in self.trace))
 
     def times(self, duration_s: float, rng: np.random.Generator) -> np.ndarray:
         """Sort the recorded trace and clip it to the window; ``rng`` is
         unused (replay is deterministic)."""
-        ts = np.sort(np.asarray(self.trace, dtype=float))
+        ts = np.sort(np.asarray(self.trace, dtype=np.float64))
         return ts[(ts >= 0.0) & (ts < duration_s)]
 
     def with_rate(self, rate: float) -> "ArrivalProcess":
@@ -168,11 +186,79 @@ class TraceReplay(ArrivalProcess):
                         "use a stochastic process for throughput search")
 
 
+@dataclass(frozen=True)
+class MergedArrivals(ArrivalProcess):
+    """Deterministic multiplexer of independent component streams.
+
+    Each component process (one per tenant) draws from its own child
+    generator spawned off the handed ``rng`` (``Generator.spawn``), so
+
+      * the merged stream is fully reproduced by one engine seed,
+      * every component stream is statistically independent of the
+        others, and
+      * adding, removing or re-parameterizing one component never
+        perturbs another component's draws (the children are indexed).
+
+    :meth:`times_and_sources` is the engine-facing API: the merged sorted
+    stream plus a parallel ``int32`` vector attributing each arrival to
+    its component index (ties break toward the lower index — stable
+    sort).  ``rate`` is derived (sum of component rates) unless given.
+    """
+    rate: float = -1.0
+    processes: Tuple[ArrivalProcess, ...] = ()
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "processes", tuple(self.processes))
+        if not self.processes:
+            raise ValueError("MergedArrivals needs at least one component "
+                             "process")
+        if self.rate < 0.0:
+            object.__setattr__(
+                self, "rate", float(sum(p.rate for p in self.processes)))
+
+    def times_and_sources(self, duration_s: float, rng: np.random.Generator
+                          ) -> Tuple[np.ndarray, np.ndarray]:
+        """The merged sorted arrival vector and the per-arrival component
+        index, drawn from per-component child generators of ``rng``.
+
+        A single-component merge passes ``rng`` straight through (there
+        is nothing to interleave), so a one-tenant engine run consumes
+        the arrival stream bit-identically to a classic single-tenant
+        run — the golden-trace gate extends over the tenant layer.
+        """
+        if len(self.processes) == 1:
+            ts = self.processes[0].times(duration_s, rng)
+            return ts, np.zeros(ts.size, dtype=np.int32)
+        rngs = rng.spawn(len(self.processes))
+        parts = [p.times(duration_s, r)
+                 for p, r in zip(self.processes, rngs)]
+        times = np.concatenate(parts) if parts else np.empty(0)
+        src = np.concatenate(
+            [np.full(t.size, k, dtype=np.int32)
+             for k, t in enumerate(parts)]) if parts else np.empty(0, np.int32)
+        order = np.argsort(times, kind="stable")
+        return times[order], src[order]
+
+    def times(self, duration_s: float, rng: np.random.Generator) -> np.ndarray:
+        return self.times_and_sources(duration_s, rng)[0]
+
+    def with_rate(self, rate: float) -> "ArrivalProcess":
+        """Rescale every component proportionally so the merged mean rate
+        hits ``rate`` (fails for unscalable components like replay)."""
+        if self.rate <= 0.0:
+            raise TypeError("cannot rescale a zero-rate merged stream")
+        f = rate / self.rate
+        return MergedArrivals(
+            rate=rate,
+            processes=tuple(p.with_rate(p.rate * f) for p in self.processes))
+
+
 ARRIVAL_KINDS: Dict[str, Type[ArrivalProcess]] = {
     "poisson": PoissonProcess,
     "bursty": BurstyOnOff,
     "diurnal": DiurnalProcess,
     "trace": TraceReplay,
+    "merged": MergedArrivals,
 }
 
 

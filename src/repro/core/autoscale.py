@@ -25,6 +25,9 @@ arXiv 2208.03192, on heterogeneous pool sizing):
     (scale up) and utilization (scale down)
   * :class:`EWMAPolicy`      — predictive: EWMA over the arrival rate,
     provisioned by Little's law with headroom
+  * :class:`WorstTenantPolicy` — multi-tenant aware: reads the snapshot's
+    per-tenant live backlogs (``FleetSnapshot.tenant_queue``) and sizes
+    the pools for the worst-off tenant instead of the fleet aggregate
 
 :func:`evaluate_policy` runs a policy and scores it on the ServerMix-style
 (arXiv 1907.11465) axes the evaluation should output: **cost per SLA-met
@@ -53,8 +56,8 @@ from repro.core.platforms import (CPU_FALLBACK_PLATFORM, DSCS_PLATFORM,
 
 __all__ = [
     "AutoscaleAction", "AutoscalePolicy", "AutoscaleReport", "EWMAPolicy",
-    "ReactivePolicy", "StaticPolicy", "evaluate_policy", "fleet_cost_usd",
-    "fleet_energy_j",
+    "ReactivePolicy", "StaticPolicy", "WorstTenantPolicy", "evaluate_policy",
+    "fleet_cost_usd", "fleet_energy_j",
 ]
 
 
@@ -226,6 +229,38 @@ class EWMAPolicy(AutoscalePolicy):
         return AutoscaleAction(
             n_cpu=min(snap.n_cpu_total, max(self.min_cpu, n_cpu)),
             n_dscs_on=min(snap.n_dscs_total, max(self.min_dscs_on, n_dscs)))
+
+
+class WorstTenantPolicy(ReactivePolicy):
+    """Reactive scaling driven by the *worst-off tenant*, not the fleet
+    aggregate.
+
+    On multi-tenant runs the engine's :class:`~repro.core.engine.
+    FleetSnapshot` carries per-tenant live backlogs (``tenant_queue``).
+    A fleet-level average can look healthy while one tenant drowns behind
+    a noisy neighbor; this policy sizes both pools as if *every* tenant
+    were as backlogged as the worst one (``max(tenant_queue) * n_tenants``
+    replaces the aggregate queue in the scale-up rule), so isolation
+    pressure, not mean load, drives capacity.  On single-tenant runs
+    (empty ``tenant_queue``) it degrades to plain :class:`ReactivePolicy`.
+    """
+
+    name = "worst-tenant"
+
+    def observe(self, snap: FleetSnapshot) -> AutoscaleAction:
+        if not snap.tenant_queue:
+            return super().observe(snap)
+        worst = max(snap.tenant_queue) * len(snap.tenant_queue)
+        # per-tenant backlogs aggregate both classes; split the pessimistic
+        # total across the pools in proportion to their live queues
+        total = max(1, snap.dscs_queue + snap.cpu_queue)
+        dscs_q = math.ceil(worst * snap.dscs_queue / total)
+        cpu_q = math.ceil(worst * snap.cpu_queue / total)
+        return AutoscaleAction(
+            n_cpu=self._resize(snap.n_cpu_active, cpu_q, snap.cpu_busy,
+                               self.min_cpu, snap.n_cpu_total),
+            n_dscs_on=self._resize(snap.n_dscs_on, dscs_q, snap.dscs_busy,
+                                   self.min_dscs_on, snap.n_dscs_total))
 
 
 # --------------------------------------------------------------------------

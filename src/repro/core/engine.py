@@ -72,6 +72,33 @@ modeled ``dscs_wake_s`` latency).  ``power_stats()`` reports busy/powered
 server-seconds for the energy/cost evaluation in
 :mod:`repro.core.autoscale`.  Without a controller every hook is inert and
 the event stream stays bit-identical to the PR-2 engine.
+
+Multi-tenant DSA sharing (PR 4): ``run_soa(tenants=[...], scheduler=...)``
+runs several :class:`~repro.core.tenancy.TenantSpec` streams — each with
+its own pipeline mix, arrival process, SLA target and share weight —
+through one fleet.  Arrival streams are multiplexed deterministically
+(:class:`~repro.core.arrivals.MergedArrivals`), every request carries its
+tenant id through the SoA columns (``EngineTrace.tenant``), and the
+drive-side scheduling policy is pluggable:
+
+  * :class:`~repro.core.tenancy.FCFSRunToCompletion` (default) — the
+    paper's single-queue run-to-completion drives; with one default
+    tenant this path is bit-identical to the classic engine (the
+    golden-trace gates pin it).
+  * :class:`~repro.core.tenancy.WeightedTimeSlice` — weighted round-robin
+    quanta per tenant with preempt/resume and a modeled DSA
+    context-switch cost.
+  * :class:`~repro.core.tenancy.SpatialPartition` — per-tenant DSA lane
+    groups (independent FCFS sub-servers, service inflated by the lane
+    fraction).
+
+Per-tenant telemetry (arrivals, completions, busy service-seconds,
+time-weighted queue depths finalized to the common horizon) comes back
+through :meth:`ClusterEngine.tenant_stats`, and :class:`FleetSnapshot`
+exposes per-tenant live views so autoscaling policies can scale on the
+worst-off tenant.  ``preempt_losers=True`` additionally cancels hedge
+losers *in service* (the classic engine only discards never-started
+tombstones), counting the reclaimed server-seconds in telemetry.
 """
 from __future__ import annotations
 
@@ -85,11 +112,13 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.arrivals import ArrivalProcess
+from repro.core.arrivals import ArrivalProcess, MergedArrivals
 from repro.core.function import Pipeline, is_acceleratable
 from repro.core.latency import LatencyModel, _erfinv
 from repro.core.platforms import (CPU_FALLBACK_PLATFORM, DSCS_PLATFORM,
                                   PLATFORMS)
+from repro.core.tenancy import (FCFSRunToCompletion, SpatialPartition,
+                                TenantSpec, WeightedTimeSlice, assign_lanes)
 from repro.core.workloads import Workload
 
 
@@ -236,6 +265,13 @@ class FleetSnapshot:
     n_dscs_on: int                      # powered (on or waking) drives
     n_cpu_total: int
     n_dscs_total: int
+    # per-tenant views (empty tuples on single-tenant runs): live queued
+    # copies fleet-wide (both classes) and arrival/completion deltas since
+    # the previous epoch, indexed by tenant — so a policy can scale on the
+    # worst-off tenant instead of the fleet aggregate.
+    tenant_queue: Tuple[int, ...] = ()
+    tenant_arrivals: Tuple[int, ...] = ()
+    tenant_completions: Tuple[int, ...] = ()
 
 
 @dataclass
@@ -254,6 +290,7 @@ class RequestResult:
     service: float = 0.0                # winning copy's service duration
     dscs_finish: Optional[float] = None
     cpu_finish: Optional[float] = None
+    tenant: int = 0                     # owning tenant (0 on single-tenant)
 
     @property
     def latency(self) -> float:
@@ -287,6 +324,7 @@ class EngineTrace:
     dscs_finish: np.ndarray             # float64, NaN = path never finished
     cpu_finish: np.ndarray              # float64, NaN = path never finished
     events: int = 0                     # events processed (incl. arrivals)
+    tenant: Optional[np.ndarray] = None  # int32 tenant ids (zeros if 1-tenant)
 
     @property
     def n(self) -> int:
@@ -305,6 +343,8 @@ class EngineTrace:
         st, sv = self.start.tolist(), self.service.tolist()
         hg = self.hedged.tolist()
         df, cf = self.dscs_finish.tolist(), self.cpu_finish.tolist()
+        tn = (self.tenant.tolist() if self.tenant is not None
+              else [0] * len(arr))
         out = []
         for i in range(len(arr)):
             w = win[i]
@@ -313,7 +353,8 @@ class EngineTrace:
                 hedged=hg[i], winner="dscs" if w == 0 else "cpu",
                 drive=drv[i], start=st[i], service=sv[i],
                 dscs_finish=None if isnan(df[i]) else df[i],
-                cpu_finish=None if isnan(cf[i]) else cf[i]))
+                cpu_finish=None if isnan(cf[i]) else cf[i],
+                tenant=tn[i]))
         return out
 
 
@@ -349,8 +390,10 @@ class SampleBank:
         return self._picks[:n]
 
 
-# copy states (per path, per request)
-_FREE, _QUEUED, _RUNNING, _DONE, _CANCELLED = 0, 1, 2, 3, 4
+# copy states (per path, per request).  _PREEMPTED marks a cancelled copy
+# whose server was already freed (preemptive loser cancellation / dropped
+# time-slice segment): any stale heap event for it is skipped on pop.
+_FREE, _QUEUED, _RUNNING, _DONE, _CANCELLED, _PREEMPTED = 0, 1, 2, 3, 4, 5
 _CHUNK = 1 << 16                        # arrival-streaming chunk
 
 # Memoized data-aware placement: drive index for request id i is
@@ -386,7 +429,8 @@ class ClusterEngine:
                  hedge_budget_s: Optional[float] = None, seed: int = 0,
                  n_plain: int = 64,
                  telemetry: Optional[Telemetry] = None,
-                 dscs_wake_s: float = 0.2):
+                 dscs_wake_s: float = 0.2,
+                 preempt_losers: bool = False):
         if n_cpu <= 0:
             raise ValueError("the fleet needs at least one CPU fallback node")
         self.n_dscs = n_dscs
@@ -397,9 +441,16 @@ class ClusterEngine:
         self.seed = seed
         self.telemetry = telemetry if telemetry is not None else Telemetry()
         self.dscs_wake_s = dscs_wake_s  # powered-off drive wake-up latency
+        # preemptive loser cancellation: when True, a hedge loser caught
+        # *in service* is cancelled immediately (its server is freed and
+        # the reclaimed service-seconds are counted in telemetry) instead
+        # of draining run-to-completion.  Default False = the paper's §V
+        # run-to-completion semantics (golden-trace gated).
+        self.preempt_losers = preempt_losers
         self._sampler = _ServiceSampler(self.lm)
         self._qstate: Optional[dict] = None
         self._pstate: Optional[dict] = None
+        self._tstate: Optional[dict] = None
 
     def sample_bank(self, pipelines: Sequence[Pipeline]) -> SampleBank:
         """A :class:`SampleBank` for common-random-number runs."""
@@ -413,12 +464,14 @@ class ClusterEngine:
         return self.run_soa(pipelines, arrivals=arrivals,
                             duration_s=duration_s).to_results()
 
-    def run_soa(self, pipelines: Sequence[Pipeline], *,
+    def run_soa(self, pipelines: Optional[Sequence[Pipeline]] = None, *,
                 arrivals: Optional[ArrivalProcess] = None,
                 duration_s: float = 0.0,
                 times: Optional[np.ndarray] = None,
                 bank: Optional[SampleBank] = None,
-                controller=None) -> EngineTrace:
+                controller=None,
+                tenants: Optional[Sequence[TenantSpec]] = None,
+                scheduler=None) -> EngineTrace:
         """The batched event loop; returns the run as an
         :class:`EngineTrace`.
 
@@ -439,10 +492,74 @@ class ClusterEngine:
         With ``controller=None`` none of this machinery runs and the event
         stream is bit-identical to the pre-autoscaling engine (the
         golden-trace gates pin this).
+
+        ``tenants`` switches the run to multi-tenant mode: each
+        :class:`~repro.core.tenancy.TenantSpec` brings its own pipeline
+        mix and arrival process (multiplexed deterministically, each
+        stream drawn from its own child generator), and every request
+        carries its tenant id (``EngineTrace.tenant``).  ``scheduler``
+        picks how drives share their DSA between tenants —
+        :class:`~repro.core.tenancy.FCFSRunToCompletion` (default, and
+        with one tenant bit-identical to the classic path),
+        :class:`~repro.core.tenancy.WeightedTimeSlice` (weighted quanta,
+        preempt/resume, modeled context-switch cost; a preempted copy's
+        ``start``/``service`` record its first service start and total
+        service demand, so ``finish > start + service`` when segments are
+        interleaved), or :class:`~repro.core.tenancy.SpatialPartition`
+        (per-tenant lane groups with proportionally inflated service).
+        Per-tenant telemetry lands in :meth:`tenant_stats`.  The CPU
+        fallback pool stays least-loaded/FCFS in every mode.
         """
+        mt = tenants is not None
+        sk = 0                          # 0 fcfs | 1 timeslice | 2 spatial
+        sched = scheduler
+        if not mt:
+            if scheduler is not None:
+                raise ValueError("scheduler= requires tenants= (single-"
+                                 "tenant runs always use per-drive FCFS)")
+            if pipelines is None:
+                raise ValueError("pass pipelines= (or tenants=)")
+        else:
+            tenants = list(tenants)
+            if not tenants:
+                raise ValueError("tenants= must name at least one tenant")
+            if pipelines is not None:
+                raise ValueError("with tenants=, pipelines come from each "
+                                 "TenantSpec's mix; drop the pipelines "
+                                 "argument")
+            if times is not None or arrivals is not None:
+                raise ValueError("with tenants=, arrivals come from each "
+                                 "TenantSpec; pass neither times= nor "
+                                 "arrivals=")
+            if bank is not None:
+                raise ValueError("SampleBank CRN replay is single-tenant "
+                                 "only")
+            if duration_s <= 0.0:
+                raise ValueError("tenants= needs a positive duration_s")
+            if sched is None:
+                sched = FCFSRunToCompletion()
+            if isinstance(sched, WeightedTimeSlice):
+                sk = 1
+            elif isinstance(sched, SpatialPartition):
+                sk = 2
+            elif isinstance(sched, FCFSRunToCompletion):
+                sk = 0
+            else:
+                raise TypeError(f"unknown drive scheduler: {sched!r}")
+            if controller is not None and sk != 0:
+                raise NotImplementedError(
+                    "autoscaling composes with the FCFS drive scheduler "
+                    "only; time-sliced/partitioned DSAs with power "
+                    "cycling are future work")
+
         ss = np.random.SeedSequence(self.seed)
         arr_rng, rng = (np.random.default_rng(s) for s in ss.spawn(2))
-        if times is None:
+        src: Optional[np.ndarray] = None
+        if mt:
+            merged = MergedArrivals(
+                processes=tuple(t.arrivals for t in tenants))
+            times, src = merged.times_and_sources(duration_s, arr_rng)
+        elif times is None:
             if arrivals is None:
                 raise ValueError("pass arrivals= or times=")
             if duration_s <= 0.0:
@@ -452,14 +569,27 @@ class ClusterEngine:
             times = arrivals.times(duration_s, arr_rng)
         times = np.ascontiguousarray(np.asarray(times, dtype=np.float64))
         n = int(times.size)
-        n_pipes = len(pipelines)
 
-        if bank is not None:
+        if mt:
+            # the combined pipeline list concatenates each tenant's mix;
+            # per-request picks index the owning tenant's slice (drawn in
+            # tenant order, so the stream is deterministic per seed)
+            pipelines = [p for t in tenants for p in t.pipelines]
+            picks = np.empty(n, dtype=np.int64)
+            off = 0
+            for k, ten in enumerate(tenants):
+                mask = src == k
+                picks[mask] = off + rng.integers(
+                    len(ten.pipelines), size=int(np.count_nonzero(mask)))
+                off += len(ten.pipelines)
+            sampler = self._sampler
+            sampler.start(rng)
+        elif bank is not None:
             picks = bank.picks(n)
             sampler = bank.tails
             sampler.rewind()
         else:
-            picks = (rng.integers(n_pipes, size=n) if n
+            picks = (rng.integers(len(pipelines), size=n) if n
                      else np.empty(0, dtype=np.int64))
             sampler = self._sampler
             sampler.start(rng)
@@ -518,6 +648,58 @@ class ClusterEngine:
         t_won_d = t_won_c = t_srv_d = t_srv_c = 0
         t_can_q = t_can_s = t_tomb = 0
         d_busy_s = c_busy_s = 0.0       # service-seconds per class
+        preempt = self.preempt_losers
+        rec_d = rec_c = 0.0             # reclaimed service-seconds per class
+        t_switch_s = 0.0                # time-slice context-switch overhead
+        t_pre = 0                       # quantum-expiry events processed
+
+        # -- per-tenant state (multi-tenant runs only) -----------------------
+        if mt:
+            K = len(tenants)
+            ten_l = src.tolist()
+            tarr = [0] * K              # arrivals per tenant
+            tdone = [0] * K             # completions per tenant
+            tb_d = [0.0] * K            # DSA service-seconds per tenant
+            tb_c = [0.0] * K            # CPU service-seconds per tenant
+            # fleet-wide per-tenant live queue depth, time-weighted per
+            # class (finalized to the common end-of-run horizon)
+            tqa_d = [0.0] * K; tqa_c = [0.0] * K
+            tqd_d = [0] * K; tqd_c = [0] * K
+            tql_d = [0.0] * K; tql_c = [0.0] * K
+            tqm_d = [0] * K; tqm_c = [0] * K
+
+            def tacct_d(k: int, t: float, delta: int) -> None:
+                tqa_d[k] += tqd_d[k] * (t - tql_d[k]); tql_d[k] = t
+                v = tqd_d[k] + delta; tqd_d[k] = v
+                if v > tqm_d[k]: tqm_d[k] = v
+
+            def tacct_c(k: int, t: float, delta: int) -> None:
+                tqa_c[k] += tqd_c[k] * (t - tql_c[k]); tql_c[k] = t
+                v = tqd_c[k] + delta; tqd_c[k] = v
+                if v > tqm_c[k]: tqm_c[k] = v
+        else:
+            ten_l = None
+
+        # -- drive-scheduler state (non-FCFS modes) --------------------------
+        if sk == 1:
+            # weighted time-slicing: per-drive per-tenant FIFO queues, a
+            # rotation cursor, the last tenant whose context is loaded on
+            # the DSA, and per-request remaining service (-1 = not started)
+            d_tq = [[deque() for _ in range(K)] for _ in range(nd)]
+            d_cur = [-1] * nd
+            d_rr = [0] * nd
+            d_lastten = [-1] * nd
+            rem_l = [-1.0] * n
+            ts_q = [sched.quantum_s * t.weight for t in tenants]
+            ts_switch = sched.switch_s
+        elif sk == 2:
+            # spatial partitioning: per (drive, tenant) lane-group FCFS
+            # sub-servers; service inflated by total/assigned lanes
+            lanes_total = sched.lanes or K
+            lane_of = assign_lanes([t.weight for t in tenants], lanes_total)
+            sp_scale = [lanes_total / l for l in lane_of]
+            sp_q = [[deque() for _ in range(K)] for _ in range(nd)]
+            sp_busy = [[0] * K for _ in range(nd)]
 
         # -- autoscaling state (inert without a controller) ------------------
         # The CPU pool scales by (de)activating a subset of the provisioned
@@ -549,6 +731,9 @@ class ClusterEngine:
             c_on_ivals: List[Tuple[float, float]] = []
             d_on_ivals: List[Tuple[float, float]] = []
             ep_last_ai = ep_last_done = 0
+            if mt:
+                ep_last_ta = [0] * K
+                ep_last_tc = [0] * K
         else:
             ep_t = INF
 
@@ -575,6 +760,10 @@ class ClusterEngine:
                 d_busy_s += svc
                 d_start_a[r2] = t; d_svc_a[r2] = svc
                 d_busy[d] = 1
+                if mt:
+                    k = ten_l[r2]
+                    tacct_d(k, t, -1)
+                    tb_d[k] += svc
                 hpush(heap, (t + svc, r2 << 1))
                 return
 
@@ -601,6 +790,10 @@ class ClusterEngine:
                 c_busy_s += svc
                 c_start_a[r2] = t; c_svc_a[r2] = svc
                 c_busy[node] = 1
+                if mt:
+                    k = ten_l[r2]
+                    tacct_c(k, t, -1)
+                    tb_c[k] += svc
                 hpush(heap, (t + svc, (r2 << 1) | 1))
                 return
 
@@ -626,6 +819,8 @@ class ClusterEngine:
                 q = c_qd[node] + 1; c_qd[node] = q
                 if q > c_maxd[node]: c_maxd[node] = q
                 cs_l[rid] = _QUEUED
+                if mt:
+                    tacct_c(ten_l[rid], t, 1)
                 # a server only goes idle by draining its deque to empty
                 # (discarding tombstones), so nonempty deque => busy
                 assert c_busy[node], "idle CPU node held a nonempty queue"
@@ -643,7 +838,120 @@ class ClusterEngine:
                 c_busy_s += svc
                 c_start_a[rid] = t; c_svc_a[rid] = svc
                 c_busy[node] = 1
+                if mt:
+                    tb_c[ten_l[rid]] += svc
                 hpush(heap, (t + svc, (rid << 1) | 1))
+
+        if sk == 1:
+            def ts_select(d: int, t: float) -> None:
+                """Weighted-round-robin scheduling decision for drive ``d``:
+                serve the next backlogged tenant's head copy for at most
+                its weighted quantum, paying the context-switch cost when
+                the serving tenant changes.  Tombstoned (cancelled while
+                queued) copies are discarded on sight."""
+                nonlocal t_tomb, s_i, d_busy_s, t_switch_s
+                tq = d_tq[d]
+                sel = -1
+                cursor = d_rr[d]
+                for step in range(1, K + 1):
+                    k = (cursor + step) % K
+                    q = tq[k]
+                    while q and ds_l[q[0]] == _CANCELLED:
+                        q.popleft()     # tombstone (reclaim counted at cancel)
+                        t_tomb += 1
+                    if q:
+                        sel = k
+                        break
+                if sel < 0:
+                    d_cur[d] = -1
+                    d_busy[d] = 0
+                    return
+                rid2 = tq[sel].popleft()
+                d_area[d] += d_qd[d] * (t - d_last[d]); d_last[d] = t
+                d_qd[d] -= 1
+                tacct_d(sel, t, -1)
+                pay = 0.0
+                if d_lastten[d] != sel:
+                    if d_lastten[d] >= 0:
+                        pay = ts_switch
+                        t_switch_s += pay
+                    d_lastten[d] = sel
+                d_rr[d] = sel
+                if rem_l[rid2] < 0.0:   # first start: draw the full service
+                    i = s_i
+                    if i == len(s_tr):
+                        s_grow()
+                    s_i = i + 1
+                    c = coef_d[picks_l[rid2]]
+                    svc = c[0] + c[1] * s_tr[i] + c[2] * s_tw[i]
+                    rem_l[rid2] = svc
+                    d_start_a[rid2] = t + pay
+                    d_svc_a[rid2] = svc
+                ds_l[rid2] = _RUNNING
+                d_cur[d] = rid2
+                d_busy[d] = 1
+                rem = rem_l[rid2]
+                q_s = ts_q[sel]
+                seg = rem if rem <= q_s else q_s
+                d_busy_s += pay + seg
+                tb_d[sel] += pay + seg
+                if rem <= q_s:          # final segment: completion event
+                    hpush(heap, (t + pay + rem, rid2 << 1))
+                else:                   # quantum expiry: preempt event
+                    hpush(heap, (t + pay + q_s, -(nd + 1 + rid2)))
+        elif sk == 2:
+            def sp_start_new(d: int, k: int, rid2: int, t: float) -> None:
+                """Idle lane group: start ``rid2`` immediately (transient
+                depth 1), service inflated by the tenant's lane share."""
+                nonlocal s_i, d_busy_s
+                # settle the drive's pending depth area first: unlike an
+                # idle FCFS drive, an idle *lane* can coexist with copies
+                # queued on the drive's other lanes (d_qd > 0)
+                d_area[d] += d_qd[d] * (t - d_last[d])
+                d_last[d] = t
+                if not d_maxd[d]: d_maxd[d] = 1
+                ds_l[rid2] = _RUNNING
+                i = s_i
+                if i == len(s_tr):
+                    s_grow()
+                s_i = i + 1
+                c = coef_d[picks_l[rid2]]
+                svc = (c[0] + c[1] * s_tr[i] + c[2] * s_tw[i]) * sp_scale[k]
+                d_busy_s += svc
+                tb_d[k] += svc
+                d_start_a[rid2] = t; d_svc_a[rid2] = svc
+                sp_busy[d][k] = 1
+                hpush(heap, (t + svc, rid2 << 1))
+
+            def sp_start(d: int, k: int, t: float) -> None:
+                """Start the next queued copy on drive ``d``'s lane group
+                for tenant ``k``, discarding tombstones."""
+                nonlocal t_tomb, s_i, d_busy_s
+                q = sp_q[d][k]
+                while q:
+                    rid2 = q.popleft()
+                    if ds_l[rid2] == _CANCELLED:
+                        t_tomb += 1
+                        continue
+                    assert ds_l[rid2] == _QUEUED, \
+                        "only queued copies may start service"
+                    d_area[d] += d_qd[d] * (t - d_last[d]); d_last[d] = t
+                    d_qd[d] -= 1
+                    tacct_d(k, t, -1)
+                    ds_l[rid2] = _RUNNING
+                    i = s_i
+                    if i == len(s_tr):
+                        s_grow()
+                    s_i = i + 1
+                    c = coef_d[picks_l[rid2]]
+                    svc = (c[0] + c[1] * s_tr[i] + c[2] * s_tw[i]) \
+                        * sp_scale[k]
+                    d_busy_s += svc
+                    tb_d[k] += svc
+                    d_start_a[rid2] = t; d_svc_a[rid2] = svc
+                    sp_busy[d][k] = 1
+                    hpush(heap, (t + svc, rid2 << 1))
+                    return
 
         # -- main loop -------------------------------------------------------
         # Event order: arrivals win every tie (they had the lowest sequence
@@ -672,6 +980,14 @@ class ClusterEngine:
                 t = ep_t
                 ep_idx += 1
                 done = t_srv_d + t_srv_c + t_won_d + t_won_c
+                if mt:
+                    snap_tq = tuple(tqd_d[k] + tqd_c[k] for k in range(K))
+                    snap_ta = tuple(a - b for a, b in zip(tarr, ep_last_ta))
+                    snap_tc = tuple(a - b for a, b in zip(tdone, ep_last_tc))
+                    ep_last_ta = list(tarr)
+                    ep_last_tc = list(tdone)
+                else:
+                    snap_tq = snap_ta = snap_tc = ()
                 act = controller.observe(FleetSnapshot(
                     time=t, epoch=ep_idx,
                     arrivals=ai - ep_last_ai,
@@ -679,7 +995,9 @@ class ClusterEngine:
                     dscs_queue=sum(d_qd), cpu_queue=sum(c_qd),
                     dscs_busy=sum(d_busy) - n_waking, cpu_busy=sum(c_busy),
                     n_cpu_active=n_c_active, n_dscs_on=n_d_on,
-                    n_cpu_total=nc, n_dscs_total=nd))
+                    n_cpu_total=nc, n_dscs_total=nd,
+                    tenant_queue=snap_tq, tenant_arrivals=snap_ta,
+                    tenant_completions=snap_tc))
                 ep_last_ai, ep_last_done = ai, done
                 if act is not None:
                     # CPU pool: activate lowest-index first / deactivate
@@ -738,25 +1056,60 @@ class ClusterEngine:
             if ht <= ft:
                 if ht < next_t:         # hedge timer fires
                     t, rid = hedge_dq.popleft()
-                    if ds_l[rid] == _QUEUED:   # still waiting: open CPU path
+                    # still waiting (and, under time-slicing, never
+                    # serviced — a preempted copy re-queues as _QUEUED but
+                    # holds partial progress, so it is no straggler)
+                    if ds_l[rid] == _QUEUED and (sk != 1
+                                                 or rem_l[rid] < 0.0):
                         hedged_l[rid] = True
                         t_hedge += 1
                         issue_cpu(rid, t)
                     continue
-            elif ft < next_t:           # a running copy finishes
+            elif ft < next_t:           # a dynamic event fires
                 t, code = hpop(heap)
-                if code < 0:            # wake event: drive is serviceable
-                    d = -code - 1
-                    assert d_power[d] == 2, "wake event for a non-waking drive"
-                    d_power[d] = 1
-                    d_busy[d] = 0
-                    n_waking -= 1
-                    if d_queues[d]:
-                        start_drive(d, t)
+                if code < 0:
+                    k2 = -code - 1
+                    if k2 < nd:         # wake event: drive is serviceable
+                        d = k2
+                        assert d_power[d] == 2, \
+                            "wake event for a non-waking drive"
+                        d_power[d] = 1
+                        d_busy[d] = 0
+                        n_waking -= 1
+                        if d_queues[d]:
+                            start_drive(d, t)
+                        continue
+                    # time-slice quantum expiry: preempt the running copy
+                    rid = k2 - nd
+                    t_pre += 1
+                    d = drive_l[rid]
+                    k = ten_l[rid]
+                    rem_l[rid] -= ts_q[k]
+                    if ds_l[rid] == _CANCELLED:
+                        # hedge loser caught mid-slice: drop it at the
+                        # quantum boundary and reclaim the remainder
+                        # (time-slicing always preempts — the §V run-to-
+                        # completion argument doesn't apply to a DSA that
+                        # already context-switches)
+                        ds_l[rid] = _PREEMPTED
+                        rec_d += rem_l[rid]
+                    else:
+                        # resume at the tenant's next turn (head of queue)
+                        d_tq[d][k].appendleft(rid)
+                        ds_l[rid] = _QUEUED
+                        d_area[d] += d_qd[d] * (t - d_last[d])
+                        d_last[d] = t
+                        q = d_qd[d] + 1; d_qd[d] = q
+                        if q > d_maxd[d]: d_maxd[d] = q
+                        tacct_d(k, t, 1)
+                    d_cur[d] = -1
+                    ts_select(d, t)
                     continue
-                end_t = t
                 rid = code >> 1
                 if code & 1:            # CPU copy finished
+                    if cs_l[rid] == _PREEMPTED:
+                        continue        # stale: node freed at cancellation
+                    end_t = t
                     node = c_node_l[rid]
                     c_busy[node] = 0
                     load = c_load[node] - 1; c_load[node] = load
@@ -768,6 +1121,8 @@ class ClusterEngine:
                         finish_a[rid] = t
                         winner_l[rid] = 1
                         cfin_a[rid] = t
+                        if mt:
+                            tdone[ten_l[rid]] += 1
                         dst = ds_l[rid]
                         if dst == _QUEUED:     # tombstone the DSCS loser
                             d = drive_l[rid]
@@ -776,9 +1131,38 @@ class ClusterEngine:
                             d_qd[d] -= 1
                             ds_l[rid] = _CANCELLED
                             t_can_q += 1
-                        elif dst == _RUNNING:  # no preemption: drains
+                            if mt:
+                                tacct_d(ten_l[rid], t, -1)
+                            if sk == 1 and rem_l[rid] >= 0.0:
+                                # preempted copy cancelled while waiting
+                                # its next slice: its remainder is
+                                # reclaimed DSA time
+                                rec_d += rem_l[rid]
+                        elif dst == _RUNNING:
                             ds_l[rid] = _CANCELLED
                             t_can_s += 1
+                            if preempt and sk != 1:
+                                # preemptive cancellation: free the DSA
+                                # now and reclaim the loser's remaining
+                                # service (its stale finish event is
+                                # skipped on pop); time-slicing instead
+                                # drops the copy at its quantum boundary
+                                ds_l[rid] = _PREEMPTED
+                                d = drive_l[rid]
+                                left = d_start_a[rid] + d_svc_a[rid] - t
+                                rec_d += left
+                                d_busy_s -= left
+                                if mt:
+                                    tb_d[ten_l[rid]] -= left
+                                if sk == 0:
+                                    d_busy[d] = 0
+                                    if d_queues[d]:
+                                        start_drive(d, t)
+                                else:
+                                    k = ten_l[rid]
+                                    sp_busy[d][k] = 0
+                                    if sp_q[d][k]:
+                                        sp_start(d, k, t)
                         if hedged_l[rid]:
                             t_won_c += 1
                         else:
@@ -791,8 +1175,10 @@ class ClusterEngine:
                         c_on_ivals.append((c_on_since[node], t))
                         c_on_since[node] = -1.0
                 else:                   # DSCS copy finished
+                    if ds_l[rid] == _PREEMPTED:
+                        continue        # stale: drive freed at cancellation
+                    end_t = t
                     d = drive_l[rid]
-                    d_busy[d] = 0
                     if ds_l[rid] == _CANCELLED:
                         dfin_a[rid] = t
                     else:
@@ -800,6 +1186,8 @@ class ClusterEngine:
                         finish_a[rid] = t
                         winner_l[rid] = 0
                         dfin_a[rid] = t
+                        if mt:
+                            tdone[ten_l[rid]] += 1
                         if hedged_l[rid]:
                             t_won_d += 1
                             cst = cs_l[rid]
@@ -812,60 +1200,131 @@ class ClusterEngine:
                                 hpush(loadheap, (load, node))
                                 cs_l[rid] = _CANCELLED
                                 t_can_q += 1
+                                if mt:
+                                    tacct_c(ten_l[rid], t, -1)
                             elif cst == _RUNNING:
                                 cs_l[rid] = _CANCELLED
                                 t_can_s += 1
+                                if preempt:
+                                    # preemptive cancellation of the CPU
+                                    # loser: free the node immediately
+                                    cs_l[rid] = _PREEMPTED
+                                    node = c_node_l[rid]
+                                    left = (c_start_a[rid] + c_svc_a[rid]
+                                            - t)
+                                    rec_c += left
+                                    c_busy_s -= left
+                                    if mt:
+                                        tb_c[ten_l[rid]] -= left
+                                    c_busy[node] = 0
+                                    load = c_load[node] - 1
+                                    c_load[node] = load
+                                    hpush(loadheap, (load, node))
+                                    if c_queues[node]:
+                                        start_cpu(node, t)
+                                    if dyn and not c_active[node] \
+                                            and not c_busy[node] \
+                                            and not c_queues[node] \
+                                            and c_on_since[node] >= 0.0:
+                                        c_on_ivals.append(
+                                            (c_on_since[node], t))
+                                        c_on_since[node] = -1.0
                         else:
                             t_srv_d += 1
-                    if d_queues[d]:
-                        start_drive(d, t)
+                    # free the DSA and continue its queue, per scheduler
+                    if sk == 0:
+                        d_busy[d] = 0
+                        if d_queues[d]:
+                            start_drive(d, t)
+                    elif sk == 1:
+                        d_cur[d] = -1
+                        d_busy[d] = 0
+                        ts_select(d, t)
+                    else:
+                        k = ten_l[rid]
+                        sp_busy[d][k] = 0
+                        if sp_q[d][k]:
+                            sp_start(d, k, t)
                 continue
             if next_t == INF:
                 break
             # arrival (wins ties against dynamic events, like the PR-1 seq)
             t = next_t
             rid = ai
+            if mt:
+                tarr[ten_l[rid]] += 1
             if accel_l[rid]:
                 d = drive_l[rid]
                 t_ddisp += 1
                 if hedge is not None:
                     hedge_dq.append((t + hedge, rid))
-                if dyn and d_power[d] == 0:
-                    # data lives on a powered-off drive: start its wake
-                    # (serviceable after dscs_wake_s) and queue the request
-                    # there; marking the drive busy routes this and any
-                    # later arrivals through the normal queue path below
-                    d_power[d] = 2
-                    n_d_on += 1
-                    n_waking += 1
-                    d_on_since[d] = t
-                    d_busy[d] = 1
-                    hpush(heap, (t + wake_s, -(d + 1)))
-                    t_wake += 1
-                if d_busy[d] or d_queues[d]:
+                if sk == 1:
+                    # time-slicing: enqueue on the owning tenant's
+                    # per-drive queue; kick the scheduler if the DSA idles
+                    k = ten_l[rid]
                     d_area[d] += d_qd[d] * (t - d_last[d]); d_last[d] = t
-                    d_queues[d].append(rid)
+                    d_tq[d][k].append(rid)
                     q = d_qd[d] + 1; d_qd[d] = q
                     if q > d_maxd[d]: d_maxd[d] = q
+                    tacct_d(k, t, 1)
                     ds_l[rid] = _QUEUED
-                    # a server only goes idle by draining its deque to empty
-                    # (discarding tombstones), so nonempty deque => busy
-                    assert d_busy[d], "idle drive held a nonempty queue"
+                    if d_cur[d] < 0:
+                        ts_select(d, t)
+                elif sk == 2:
+                    # spatial partitioning: the tenant's own lane group
+                    k = ten_l[rid]
+                    if sp_busy[d][k] or sp_q[d][k]:
+                        d_area[d] += d_qd[d] * (t - d_last[d]); d_last[d] = t
+                        sp_q[d][k].append(rid)
+                        q = d_qd[d] + 1; d_qd[d] = q
+                        if q > d_maxd[d]: d_maxd[d] = q
+                        tacct_d(k, t, 1)
+                        ds_l[rid] = _QUEUED
+                    else:
+                        sp_start_new(d, k, rid, t)
                 else:
-                    # idle drive: start immediately (transient depth 1)
-                    d_last[d] = t
-                    if not d_maxd[d]: d_maxd[d] = 1
-                    ds_l[rid] = _RUNNING
-                    i = s_i
-                    if i == len(s_tr):
-                        s_grow()
-                    s_i = i + 1
-                    c = coef_d[picks_l[rid]]
-                    svc = c[0] + c[1] * s_tr[i] + c[2] * s_tw[i]
-                    d_busy_s += svc
-                    d_start_a[rid] = t; d_svc_a[rid] = svc
-                    d_busy[d] = 1
-                    hpush(heap, (t + svc, rid << 1))
+                    if dyn and d_power[d] == 0:
+                        # data lives on a powered-off drive: start its wake
+                        # (serviceable after dscs_wake_s) and queue the
+                        # request there; marking the drive busy routes this
+                        # and any later arrivals through the normal queue
+                        # path below
+                        d_power[d] = 2
+                        n_d_on += 1
+                        n_waking += 1
+                        d_on_since[d] = t
+                        d_busy[d] = 1
+                        hpush(heap, (t + wake_s, -(d + 1)))
+                        t_wake += 1
+                    if d_busy[d] or d_queues[d]:
+                        d_area[d] += d_qd[d] * (t - d_last[d]); d_last[d] = t
+                        d_queues[d].append(rid)
+                        q = d_qd[d] + 1; d_qd[d] = q
+                        if q > d_maxd[d]: d_maxd[d] = q
+                        ds_l[rid] = _QUEUED
+                        if mt:
+                            tacct_d(ten_l[rid], t, 1)
+                        # a server only goes idle by draining its deque to
+                        # empty (discarding tombstones), so nonempty deque
+                        # => busy
+                        assert d_busy[d], "idle drive held a nonempty queue"
+                    else:
+                        # idle drive: start immediately (transient depth 1)
+                        d_last[d] = t
+                        if not d_maxd[d]: d_maxd[d] = 1
+                        ds_l[rid] = _RUNNING
+                        i = s_i
+                        if i == len(s_tr):
+                            s_grow()
+                        s_i = i + 1
+                        c = coef_d[picks_l[rid]]
+                        svc = c[0] + c[1] * s_tr[i] + c[2] * s_tw[i]
+                        d_busy_s += svc
+                        d_start_a[rid] = t; d_svc_a[rid] = svc
+                        d_busy[d] = 1
+                        if mt:
+                            tb_d[ten_l[rid]] += svc
+                        hpush(heap, (t + svc, rid << 1))
             else:
                 issue_cpu(rid, t)
                 t_cdisp += 1
@@ -879,9 +1338,10 @@ class ClusterEngine:
             else:
                 next_t = INF
         # every enqueued hedge timer is eventually popped and every started
-        # copy (= one sampler draw) finishes, so the count is exact
+        # copy (= one sampler draw) reaches a terminal event, so the count
+        # is exact (quantum expiries counted separately)
         events = (n + (s_i - sampler._i)
-                  + (t_ddisp if hedge is not None else 0) + t_wake)
+                  + (t_ddisp if hedge is not None else 0) + t_wake + t_pre)
         sampler._i = s_i                # keep the sampler cursor consistent
 
         # -- power accounting (busy/powered seconds per class) ---------------
@@ -907,6 +1367,37 @@ class ClusterEngine:
             "cpu": {"busy_s": c_busy_s, "powered_s": c_on_s, "n": nc},
             "wake_events": t_wake, "epochs": ep_idx}
 
+        # -- per-tenant telemetry (finalized to the common horizon) ----------
+        if mt:
+            for k in range(K):
+                tqa_d[k] += tqd_d[k] * (end_t - tql_d[k]); tql_d[k] = end_t
+                tqa_c[k] += tqd_c[k] * (end_t - tql_c[k]); tql_c[k] = end_t
+            hz = end_t
+            self._tstate = {
+                "horizon": hz,
+                "scheduler": sched.name,
+                "names": [ten.name for ten in tenants],
+                "sla_s": [ten.sla_s for ten in tenants],
+                "weight": [ten.weight for ten in tenants],
+                "arrivals": tarr,
+                "completions": tdone,
+                "busy_dscs_s": tb_d,
+                "busy_cpu_s": tb_c,
+                "queue": {
+                    "dscs": {"mean_depth": [a / hz if hz > 0 else 0.0
+                                            for a in tqa_d],
+                             "max_depth": [float(v) for v in tqm_d]},
+                    "cpu": {"mean_depth": [a / hz if hz > 0 else 0.0
+                                           for a in tqa_c],
+                            "max_depth": [float(v) for v in tqm_c]},
+                },
+                "switch_overhead_s": t_switch_s,
+                "reclaimed_dscs_s": rec_d,
+                "reclaimed_cpu_s": rec_c,
+            }
+        else:
+            self._tstate = None
+
         # -- flush telemetry -------------------------------------------------
         inc = self.telemetry.inc
         for name, v in (("dscs_dispatch", t_ddisp), ("cpu_dispatch", t_cdisp),
@@ -915,7 +1406,11 @@ class ClusterEngine:
                         ("dscs_served", t_srv_d), ("cpu_served", t_srv_c),
                         ("cancelled_in_queue", t_can_q),
                         ("cancelled_in_service", t_can_s),
-                        ("tombstones_discarded", t_tomb)):
+                        ("tombstones_discarded", t_tomb),
+                        ("reclaimed_dscs_s", rec_d),
+                        ("reclaimed_cpu_s", rec_c),
+                        ("ts_switch_overhead_s", t_switch_s),
+                        ("ts_preemptions", t_pre)):
             if v:
                 inc(name, v)
 
@@ -940,7 +1435,8 @@ class ClusterEngine:
             service=np.where(dscs_won, as_np(d_svc_a), as_np(c_svc_a)),
             hedged=np.array(hedged_l, dtype=bool),
             dscs_finish=as_np(dfin_a), cpu_finish=as_np(cfin_a),
-            events=events)
+            events=events,
+            tenant=(src if mt else np.zeros(n, dtype=np.int32)))
 
     # -- telemetry -----------------------------------------------------------
     def queue_stats(self) -> Dict[str, Dict[str, float]]:
@@ -982,3 +1478,21 @@ class ClusterEngine:
             return {"horizon": 0.0, "dscs": dict(zero), "cpu": dict(zero),
                     "wake_events": 0, "epochs": 0}
         return self._pstate
+
+    def tenant_stats(self) -> Optional[Dict[str, object]]:
+        """Per-tenant telemetry from the last multi-tenant run (``None``
+        after single-tenant runs).
+
+        Keys: ``horizon`` (common end-of-run time every depth integral is
+        finalized to), ``scheduler``, and per-tenant parallel lists
+        indexed by tenant — ``names``/``sla_s``/``weight`` echo the specs;
+        ``arrivals``/``completions`` are request counts;
+        ``busy_dscs_s``/``busy_cpu_s`` are consumed service-seconds per
+        class (time-slice context-switch overhead is charged to the
+        incoming tenant); ``queue`` holds per-class
+        ``mean_depth``/``max_depth`` of the tenant's live queued copies
+        fleet-wide (mean is the depth integral over the common horizon).
+        ``switch_overhead_s`` and ``reclaimed_dscs_s``/``reclaimed_cpu_s``
+        are run-level scalars.
+        """
+        return self._tstate

@@ -21,6 +21,12 @@ the engine's event loop:
     resizes the active fleet at epoch boundaries and scores the run on
     cost per SLA-met request and energy per request (fig20); the policy
     classes are re-exported here as the public API
+  * multi-tenancy: ``run_tenants`` serves several
+    :class:`~repro.core.tenancy.TenantSpec` streams through one fleet
+    under a pluggable drive scheduler (FCFS run-to-completion baseline,
+    weighted time-slicing, spatial DSA-lane partitioning) and returns
+    per-tenant :class:`~repro.core.tenancy.TenantReport` scorecards
+    (fig21 fairness study); the tenancy API is re-exported here
 
 Every run is reproducible from the constructor seed: repeated ``run``
 calls on one ``ClusterSim`` (and two sims built with equal seeds) produce
@@ -29,7 +35,7 @@ identical ``RequestResult`` streams.
 from __future__ import annotations
 
 import math
-from typing import List, Optional
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -37,16 +43,23 @@ from repro.core.arrivals import ArrivalProcess, PoissonProcess
 from repro.core.autoscale import (AutoscaleAction,  # noqa: F401
                                   AutoscalePolicy, AutoscaleReport,
                                   EWMAPolicy, ReactivePolicy, StaticPolicy,
-                                  evaluate_policy)
+                                  WorstTenantPolicy, evaluate_policy)
 from repro.core.engine import (ClusterEngine, EngineTrace,  # noqa: F401
                                FleetSnapshot, RequestResult, Telemetry)
 from repro.core.function import Pipeline
 from repro.core.latency import LatencyModel
 from repro.core.placement import StoragePool
+from repro.core.tenancy import (DriveScheduler,  # noqa: F401
+                                FCFSRunToCompletion, SpatialPartition,
+                                TenantReport, TenantSpec, WeightedTimeSlice,
+                                jain_index, tenant_reports)
 
 __all__ = ["AutoscaleAction", "AutoscalePolicy", "AutoscaleReport",
-           "ClusterSim", "EWMAPolicy", "FleetSnapshot", "ReactivePolicy",
-           "RequestResult", "StaticPolicy", "Telemetry"]
+           "ClusterSim", "DriveScheduler", "EWMAPolicy",
+           "FCFSRunToCompletion", "FleetSnapshot", "ReactivePolicy",
+           "RequestResult", "SpatialPartition", "StaticPolicy", "Telemetry",
+           "TenantReport", "TenantSpec", "WeightedTimeSlice",
+           "WorstTenantPolicy", "jain_index", "tenant_reports"]
 
 
 class ClusterSim:
@@ -90,6 +103,39 @@ class ClusterSim:
     def queue_stats(self):
         """Queue-depth telemetry from the most recent ``run``."""
         return self.engine.queue_stats()
+
+    # -- multi-tenancy (ROADMAP item; see repro.core.tenancy) ----------------
+    def run_tenants(self, tenants: Sequence[TenantSpec], *,
+                    duration_s: float,
+                    scheduler: Optional[DriveScheduler] = None,
+                    controller: Optional[AutoscalePolicy] = None,
+                    ) -> Tuple[EngineTrace, List[TenantReport]]:
+        """Serve several tenants' streams through this fleet and score
+        each tenant.
+
+        Every :class:`~repro.core.tenancy.TenantSpec` brings its own
+        pipeline mix, arrival process, SLA target and share weight; the
+        streams are multiplexed deterministically from the sim seed.
+        ``scheduler`` picks how drives share their DSA —
+        :class:`FCFSRunToCompletion` (default, the paper's §V baseline),
+        :class:`WeightedTimeSlice` or :class:`SpatialPartition`.
+        ``controller`` optionally attaches an autoscaling policy (FCFS
+        scheduler only).  Returns the raw
+        :class:`~repro.core.engine.EngineTrace` (``trace.tenant`` maps
+        each request to its tenant) and one
+        :class:`~repro.core.tenancy.TenantReport` per tenant; the
+        engine's :meth:`~repro.core.engine.ClusterEngine.tenant_stats`
+        holds the per-tenant queue/busy-seconds telemetry afterwards.
+        """
+        trace = self.engine.run_soa(tenants=tenants, duration_s=duration_s,
+                                    scheduler=scheduler,
+                                    controller=controller)
+        return trace, tenant_reports(trace, tenants,
+                                     self.engine.tenant_stats())
+
+    def tenant_stats(self):
+        """Per-tenant telemetry from the most recent ``run_tenants``."""
+        return self.engine.tenant_stats()
 
     # -- autoscaling (ROADMAP item; see repro.core.autoscale) ----------------
     def run_autoscaled(self, pipelines: List[Pipeline], *,

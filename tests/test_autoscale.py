@@ -8,7 +8,8 @@ import math
 import numpy as np
 import pytest
 
-from repro.core.arrivals import DiurnalProcess, PoissonProcess, TraceReplay
+from repro.core.arrivals import (BurstyOnOff, DiurnalProcess, PoissonProcess,
+                                 TraceReplay)
 from repro.core.autoscale import (AutoscaleAction, AutoscalePolicy,
                                   EWMAPolicy, ReactivePolicy, StaticPolicy,
                                   evaluate_policy, fleet_cost_usd,
@@ -350,6 +351,102 @@ def test_snapshot_does_not_count_waking_drives_as_busy():
     for s in mid_wake:
         assert s.n_dscs_on == 1         # powered (waking) ...
         assert s.dscs_busy == 0         # ... but serving nothing yet
+
+
+def test_two_tenant_queue_and_power_stats_under_mid_run_autoscale():
+    """The PR-3 hand-computed depth-area test, extended to two tenants:
+    tenant A lands two simultaneous requests at t=0 (one per idle node),
+    an epoch at t=1 shrinks the pool to one node, then tenant B lands two
+    requests at t=2 that must share node 0 (one queues).  Per-tenant
+    queue depths and the fleet power accounting must finalize at the
+    common horizon exactly."""
+    from repro.core.tenancy import TenantSpec
+    tenants = [
+        TenantSpec("a", (standard_pipeline("asset_damage"),),
+                   TraceReplay(trace=(0.0, 0.0))),
+        TenantSpec("b", (standard_pipeline("asset_damage"),),
+                   TraceReplay(trace=(2.0, 2.0))),
+    ]
+    eng = ClusterEngine(n_dscs=0, n_cpu=2, seed=0)
+    trace = eng.run_soa(tenants=tenants, duration_s=10.0,
+                        controller=_Fixed(1, 0))
+    res = trace.to_results()
+    assert len(res) == 4
+    r = sorted(res, key=lambda x: (x.arrival, x.start))
+    a0, a1, b0, b1 = r
+    assert [a0.tenant, a1.tenant, b0.tenant, b1.tenant] == [0, 0, 1, 1]
+    # tenant A spread over both idle nodes: no queueing at all
+    assert a0.queue_wait == 0.0 and a1.queue_wait == 0.0
+    # node 1 drained A's request before the t=1 epoch, so tenant B's two
+    # requests share the single surviving node: b1 queues behind b0
+    assert b0.queue_wait == 0.0
+    assert b1.start == pytest.approx(b0.finish)
+    horizon = max(x.finish for x in res)
+    st = eng.tenant_stats()
+    assert st["horizon"] == pytest.approx(horizon)
+    # per-tenant depth integrals over the COMMON horizon: A never queued,
+    # B accumulated exactly b1's wait
+    assert st["queue"]["cpu"]["max_depth"] == [0.0, 1.0]
+    assert st["queue"]["cpu"]["mean_depth"][0] == 0.0
+    want_b = (b1.start - b1.arrival) / horizon
+    assert st["queue"]["cpu"]["mean_depth"][1] == pytest.approx(want_b,
+                                                                abs=1e-12)
+    # per-tenant busy seconds are each tenant's own service sums
+    assert st["busy_cpu_s"][0] == pytest.approx(a0.service + a1.service)
+    assert st["busy_cpu_s"][1] == pytest.approx(b0.service + b1.service)
+    # fleet queue_stats sees the same single queued copy, and the power
+    # accounting matches the PR-3 closed form (node 1 off at t=1 exactly)
+    q = eng.queue_stats()["cpu"]
+    assert q["max_depth"] == 1.0
+    assert q["mean_depth"] == pytest.approx(
+        (b1.start - b1.arrival) / (2.0 * horizon), abs=1e-12)
+    ps = eng.power_stats()
+    assert ps["cpu"]["powered_s"] == pytest.approx(horizon + 1.0)
+
+
+def test_worst_tenant_policy_scales_on_per_tenant_backlog():
+    """A quiet tenant sharing the fleet with a bursting one: the
+    aggregate-queue ReactivePolicy and the WorstTenantPolicy see the same
+    snapshots, but the worst-tenant rule provisions for max(tenant_queue)
+    * n_tenants, so it must grow the pool at least as far, and the
+    snapshots must actually carry the per-tenant views."""
+    from repro.core.autoscale import WorstTenantPolicy
+    from repro.core.tenancy import TenantSpec
+    pipes = (standard_pipeline("asset_damage", accelerate=False),)
+    tenants = [
+        TenantSpec("quiet", pipes, PoissonProcess(rate=2.0)),
+        TenantSpec("bursty", pipes,
+                   BurstyOnOff(rate=60.0, burst_factor=6.0, mean_on_s=2.0,
+                               mean_off_s=6.0)),
+    ]
+    peaks = {}
+    for name, pol in (("reactive", ReactivePolicy()),
+                      ("worst", WorstTenantPolicy())):
+        rec = _Recorder(pol)
+        ClusterEngine(n_dscs=0, n_cpu=16, seed=0).run_soa(
+            tenants=tenants, duration_s=20.0, controller=rec)
+        assert rec.snaps
+        for s in rec.snaps:
+            assert len(s.tenant_queue) == 2
+            assert len(s.tenant_arrivals) == 2
+            assert all(v >= 0 for v in s.tenant_queue)
+        assert (sum(sum(s.tenant_arrivals) for s in rec.snaps)
+                <= sum(s.arrivals for s in rec.snaps))
+        peaks[name] = max(s.n_cpu_active for s in rec.snaps)
+    assert peaks["worst"] >= peaks["reactive"] > 1
+
+
+def test_worst_tenant_policy_degrades_to_reactive_single_tenant():
+    """On classic (single-tenant) runs the snapshot carries no per-tenant
+    views and the policy must act exactly like ReactivePolicy."""
+    from repro.core.autoscale import WorstTenantPolicy
+    kw = dict(arrivals=DiurnalProcess(rate=60.0, period_s=20.0),
+              duration_s=20, n_dscs=4, n_cpu=12, sla_s=0.6,
+              hedge_budget_s=0.08, seed=3, latency_model=LatencyModel())
+    a = evaluate_policy(ReactivePolicy(), PIPES, **kw)
+    b = evaluate_policy(WorstTenantPolicy(), PIPES, **kw)
+    assert a.cost_usd == b.cost_usd
+    assert a.p99_s == b.p99_s
 
 
 def test_policy_validation():

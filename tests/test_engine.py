@@ -242,6 +242,91 @@ def test_tombstoned_copies_are_never_started():
 
 
 # --------------------------------------------------------------------------
+# preemptive loser cancellation (engine flag; reclaimed-seconds telemetry)
+# --------------------------------------------------------------------------
+
+def test_preemptive_loser_cancellation_reclaims_server_seconds():
+    """With ``preempt_losers=True`` an in-service hedge loser is cancelled
+    immediately: its server is freed, its path finish time stays unset
+    (it never completed), and the remaining service is counted as
+    reclaimed seconds — strictly positive in a hedging-heavy scenario."""
+    from repro.core.engine import ClusterEngine
+    kw = dict(n_dscs=3, n_cpu=6, hedge_budget_s=0.02, seed=4)
+    arr = PoissonProcess(rate=120.0)
+
+    base = ClusterEngine(**kw)
+    base.run(PIPES, arrivals=arr, duration_s=12)
+    assert base.telemetry.get("cancelled_in_service") > 0
+    assert base.telemetry.get("reclaimed_dscs_s") == 0.0
+    assert base.telemetry.get("reclaimed_cpu_s") == 0.0
+
+    eng = ClusterEngine(preempt_losers=True, **kw)
+    res = eng.run(PIPES, arrivals=arr, duration_s=12)
+    tel = eng.telemetry
+    assert tel.get("cancelled_in_service") > 0
+    reclaimed = tel.get("reclaimed_dscs_s") + tel.get("reclaimed_cpu_s")
+    assert reclaimed > 0.0
+    # every request still completes, and every cancelled loser (queued OR
+    # in-service) now leaves exactly one path finish unset
+    assert all(r.finish >= r.arrival for r in res)
+    one_sided = sum(1 for r in res if r.hedged
+                    and (r.dscs_finish is None) != (r.cpu_finish is None))
+    assert one_sided == (tel.get("cancelled_in_queue")
+                         + tel.get("cancelled_in_service"))
+    # reclaimed time shrinks the busy-seconds integral versus the
+    # run-to-completion baseline (the drives/CPUs did strictly less work)
+    ps_base, ps_pre = base.power_stats(), eng.power_stats()
+    assert (ps_pre["dscs"]["busy_s"] + ps_pre["cpu"]["busy_s"]
+            < ps_base["dscs"]["busy_s"] + ps_base["cpu"]["busy_s"])
+
+
+def test_preemption_reclaims_nothing_without_hedging():
+    """No hedging -> no losers -> nothing to reclaim, flag or not; the
+    stream must equal the unflagged engine's bit-for-bit."""
+    from repro.core.engine import ClusterEngine
+    kw = dict(n_dscs=3, n_cpu=6, hedge_budget_s=None, seed=4)
+    arr = PoissonProcess(rate=120.0)
+    a = ClusterEngine(preempt_losers=True, **kw).run(PIPES, arrivals=arr,
+                                                     duration_s=8)
+    eng = ClusterEngine(**kw)
+    b = eng.run(PIPES, arrivals=arr, duration_s=8)
+    assert a == b
+    flagged = ClusterEngine(preempt_losers=True, **kw)
+    flagged.run(PIPES, arrivals=arr, duration_s=8)
+    assert flagged.telemetry.get("reclaimed_dscs_s") == 0.0
+    assert flagged.telemetry.get("reclaimed_cpu_s") == 0.0
+
+
+# --------------------------------------------------------------------------
+# DiurnalProcess / TraceReplay interop (satellite: round-trip fidelity)
+# --------------------------------------------------------------------------
+
+def test_trace_replay_round_trips_generated_stream_bit_exactly():
+    """Recording a generated arrival stream and replaying it through
+    TraceReplay must reproduce the original engine run exactly — any
+    float re-quantization in the tuple round-trip would shift every
+    queueing decision downstream."""
+    arr = DiurnalProcess(rate=300.0, amplitude=0.8, period_s=10.0)
+    # the exact stream the engine draws internally for this seed: child 0
+    # of the engine SeedSequence feeds the arrival process
+    ts = arr.times(12.0, np.random.default_rng(
+        np.random.SeedSequence(7).spawn(2)[0]))
+    sim_live = ClusterSim(n_dscs=4, n_cpu=8, hedge_budget_s=0.05, seed=7)
+    a = sim_live.run(PIPES, arrivals=arr, duration_s=12)
+
+    replay = TraceReplay(trace=ts)              # numpy array input
+    assert isinstance(replay.trace, tuple)      # normalized, hashable
+    assert all(isinstance(t, float) for t in replay.trace)
+    sim_replay = ClusterSim(n_dscs=4, n_cpu=8, hedge_budget_s=0.05, seed=7)
+    b = sim_replay.run(PIPES, arrivals=replay, duration_s=12)
+    assert len(a) == len(b) > 0
+    assert a == b
+    # and the replay's own output is the recorded stream, bit-for-bit
+    assert np.array_equal(
+        replay.times(12.0, np.random.default_rng(0)), ts)
+
+
+# --------------------------------------------------------------------------
 # queue_stats: common end-of-run horizon (satellite fix)
 # --------------------------------------------------------------------------
 
