@@ -2,7 +2,7 @@
 (name, value, derived) and is invoked by benchmarks.run.
 
 ``SMOKE`` (set by ``benchmarks.run --smoke``) shrinks the expensive
-simulation figures (fig21) to a CI-sized fast path with the same
+simulation figures (fig21, fig22) to a CI-sized fast path with the same
 structure and acceptance ratios.
 """
 from __future__ import annotations
@@ -27,6 +27,7 @@ from repro.core.scheduler import ClusterSim
 from repro.core.tenancy import (SpatialPartition, TenantSpec,
                                 WeightedTimeSlice, isolation_violation_rate,
                                 jain_index, tenant_reports)
+from repro.core.tiering import MigrationPolicy, TierConfig
 from repro.core.workloads import WORKLOADS
 
 Row = Tuple[str, float, str]
@@ -379,11 +380,111 @@ def fig21_tenant_fairness() -> List[Row]:
     return rows
 
 
+def fig22_tiered_storage() -> List[Row]:
+    """Beyond-paper tiered data layer study (ROADMAP item): p99 and
+    throughput vs replication factor x per-drive cache size under
+    Zipf-skewed object popularity.
+
+    The paper's static single-replica placement (§V) pins every object on
+    one SHA-1-selected drive, so a Zipf-hot key melts that drive while
+    the rest of the fleet idles.  The tiered data layer (tiering.py)
+    answers with k-way replication (cache-warmth- and load-aware replica
+    routing), per-drive DRAM caches (hits skip flash P2P + NS driver),
+    lazy backing-store fills and epoch-driven hot-key migration.  The
+    acceptance criterion is >= 2x hot-drive p99 improvement for k=2 plus
+    a warm cache over the single-replica baseline (the ``p99_gain``
+    row, CI-gated by the fig22 smoke step)."""
+    dur = 16.0 if SMOKE else 60.0
+    rate = 76.0                         # hot drive ~1.0 util at k=1
+    n_objects, zipf_s = 256, 1.2        # top object ~25% of traffic
+    pipes = [standard_pipeline("asset_damage")]
+    arr = make_arrivals("poisson", rate)
+    cache_mb = 64
+
+    configs = (
+        ("k1", TierConfig(replication_k=1, n_objects=n_objects,
+                          zipf_s=zipf_s)),
+        ("k2", TierConfig(replication_k=2, n_objects=n_objects,
+                          zipf_s=zipf_s)),
+        ("k2_cache", TierConfig(replication_k=2,
+                                cache_bytes=cache_mb << 20, admit_after=2,
+                                n_objects=n_objects, zipf_s=zipf_s)),
+        ("k3_cache", TierConfig(replication_k=3,
+                                cache_bytes=cache_mb << 20, admit_after=2,
+                                n_objects=n_objects, zipf_s=zipf_s)),
+        ("k1_migration", TierConfig(replication_k=1, n_objects=n_objects,
+                                    zipf_s=zipf_s,
+                                    migration=MigrationPolicy(
+                                        epoch_s=1.0, max_moves_per_epoch=4,
+                                        min_queue_imbalance=4))),
+    )
+
+    rows: List[Row] = []
+    hot_p99 = {}
+    for name, tier in configs:
+        sim = ClusterSim(n_dscs=8, n_cpu=8, seed=0, tier=tier)
+        res = sim.run(pipes, arrivals=arr, duration_s=dur)
+        st = sim.tier_stats()
+        lat = np.array([r.latency for r in res])
+        drv = np.array([r.drive for r in res])
+        # hot-drive p99: tail latency of the requests served by the
+        # busiest drive — where the Zipf skew lands
+        counts = np.bincount(drv[drv >= 0], minlength=8)
+        hot = int(np.argmax(counts))
+        hot_lat = lat[drv == hot]
+        hot_p99[name] = float(np.percentile(hot_lat, 99))
+        horizon = max(r.finish for r in res)
+        thr = len(res) / horizon
+        hit = st["cache"]["hit_rate"]
+        mig = st["migration"]
+        rows.append((f"fig22/{name}/hot_drive_p99_s", hot_p99[name],
+                     f"drive {hot} served {int(counts[hot])}/{len(res)} "
+                     f"(hot share {counts[hot] / len(res):.2f})"))
+        rows.append((f"fig22/{name}/fleet_p99_s",
+                     float(np.percentile(lat, 99)),
+                     f"p50={float(np.percentile(lat, 50)):.3f}s"))
+        rows.append((f"fig22/{name}/throughput_rps", thr,
+                     f"n={len(res)} over {horizon:.1f}s"))
+        rows.append((f"fig22/{name}/cache_hit_rate", hit,
+                     f"fills={st['backing_fetches']} "
+                     f"cache={cache_mb if tier.cache_bytes else 0}MB/drive"))
+        if mig is not None:
+            rows.append((f"fig22/{name}/migration_moves",
+                         float(mig["moves"]),
+                         f"over {mig['epochs']} epochs"))
+    rows.append(("fig22/k2_cache/p99_gain",
+                 hot_p99["k1"] / hot_p99["k2_cache"],
+                 "acceptance criterion: must be >= 2"))
+    rows.append(("fig22/k1_migration/p99_gain",
+                 hot_p99["k1"] / hot_p99["k1_migration"],
+                 "hot-key migration alone (informational)"))
+
+    # composition with the fig21 tenant layer: the tier routes replicas
+    # under multi-tenant FCFS too (time-slice/spatial DSAs raise)
+    tenants = [
+        TenantSpec("latency", tuple(pipes), make_arrivals("poisson", 30.0),
+                   sla_s=0.3, weight=1.0),
+        TenantSpec("batch", tuple(pipes), make_arrivals("poisson", 40.0),
+                   sla_s=1.0, weight=1.0),
+    ]
+    mt_sim = ClusterSim(n_dscs=8, n_cpu=8, seed=0,
+                        tier=TierConfig(replication_k=2,
+                                        cache_bytes=cache_mb << 20,
+                                        admit_after=2, n_objects=n_objects,
+                                        zipf_s=zipf_s))
+    _, reps = mt_sim.run_tenants(tenants, duration_s=dur)
+    mt_hit = mt_sim.tier_stats()["cache"]["hit_rate"]
+    for r in reps:
+        rows.append((f"fig22/tenants_fcfs/{r.name}/p99_s", r.p99_s,
+                     f"sla={r.sla_frac:.3f} hit_rate={mt_hit:.3f}"))
+    return rows
+
+
 ALL_FIGURES = [
     fig04_breakdown, fig05_tail_cdf, fig07_dse_pareto, fig08_speedup,
     fig09_runtime_breakdown, fig10_energy, fig11_cost_efficiency,
     fig12_throughput, fig13_batch_sensitivity, fig14_num_functions,
     fig15_pcie_sensitivity, fig16_tail_latency, fig17_cold_start,
     fig18_arrival_scenarios, fig19_hedging_tail, fig20_autoscaling,
-    fig21_tenant_fairness,
+    fig21_tenant_fairness, fig22_tiered_storage,
 ]

@@ -332,19 +332,23 @@ def evaluate_policy(policy: AutoscalePolicy, pipelines: Sequence[Pipeline], *,
                     n_dscs: int, n_cpu: int, sla_s: float,
                     hedge_budget_s: Optional[float] = None, seed: int = 0,
                     latency_model: Optional[LatencyModel] = None,
-                    dscs_wake_s: float = 0.2) -> AutoscaleReport:
+                    dscs_wake_s: float = 0.2,
+                    tier=None) -> AutoscaleReport:
     """Run ``policy`` over a fresh engine and score it.
 
     ``n_dscs``/``n_cpu`` are the provisioned maxima the policy scales
     within; everything stochastic derives from ``seed``, so two policies
     evaluated with equal seeds face the identical arrival stream and
     service-tail draws — the comparison isolates the control decision.
+    ``tier`` optionally attaches a :class:`~repro.core.tiering.TierConfig`
+    (replica routing prefers powered drives, so the tier composes with
+    power cycling); ``None`` keeps the classic placement path.
     """
     policy.reset()
     eng = ClusterEngine(n_dscs=n_dscs, n_cpu=n_cpu,
                         latency_model=latency_model,
                         hedge_budget_s=hedge_budget_s, seed=seed,
-                        dscs_wake_s=dscs_wake_s)
+                        dscs_wake_s=dscs_wake_s, tier=tier)
     trace = eng.run_soa(pipelines, arrivals=arrivals, duration_s=duration_s,
                         controller=policy)
     ps = eng.power_stats()

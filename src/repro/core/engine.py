@@ -99,6 +99,19 @@ exposes per-tenant live views so autoscaling policies can scale on the
 worst-off tenant.  ``preempt_losers=True`` additionally cancels hedge
 losers *in service* (the classic engine only discards never-started
 tombstones), counting the reclaimed server-seconds in telemetry.
+
+Tiered data layer (PR 5): ``ClusterEngine(tier=TierConfig(...))`` swaps
+the memoized single-hash placement for cache-warmth- and load-aware
+routing over each object's k-way replica set (``drive_l`` becomes the
+replica-choice column), models per-drive DRAM caches (hits shave the
+flash-P2P + NS-driver time off the service draw), lazily materializes
+secondary replicas from a remote backing store, and lets a
+:class:`~repro.core.tiering.MigrationController` retarget Zipf-hot keys
+off saturated drives at its own epoch boundaries.  Telemetry lands in
+:meth:`ClusterEngine.tier_stats`.  A ``None``/disabled tier takes the
+classic path — same rng spawns, no extra draws — so tier-off runs stay
+bit-identical to the golden traces.  The tier composes with autoscaling
+and with multi-tenant FCFS; time-sliced/partitioned DSAs raise.
 """
 from __future__ import annotations
 
@@ -119,6 +132,9 @@ from repro.core.platforms import (CPU_FALLBACK_PLATFORM, DSCS_PLATFORM,
                                   PLATFORMS)
 from repro.core.tenancy import (FCFSRunToCompletion, SpatialPartition,
                                 TenantSpec, WeightedTimeSlice, assign_lanes)
+from repro.core.tiering import (DriveCache, MigrationController, TierConfig,
+                                _hrw_ranking, build_replica_table,
+                                zipf_object_ids)
 from repro.core.workloads import Workload
 
 
@@ -430,7 +446,8 @@ class ClusterEngine:
                  n_plain: int = 64,
                  telemetry: Optional[Telemetry] = None,
                  dscs_wake_s: float = 0.2,
-                 preempt_losers: bool = False):
+                 preempt_losers: bool = False,
+                 tier: Optional[TierConfig] = None):
         if n_cpu <= 0:
             raise ValueError("the fleet needs at least one CPU fallback node")
         self.n_dscs = n_dscs
@@ -447,10 +464,17 @@ class ClusterEngine:
         # of draining run-to-completion.  Default False = the paper's §V
         # run-to-completion semantics (golden-trace gated).
         self.preempt_losers = preempt_losers
+        # tiered data layer (tiering.py): per-drive DRAM caches, k-way
+        # replica routing, lazy backing-store fills and hot-key migration.
+        # None or a disabled config keeps the classic bit-exact path.
+        self.tier = tier
+        if tier is not None:
+            tier.validate()
         self._sampler = _ServiceSampler(self.lm)
         self._qstate: Optional[dict] = None
         self._pstate: Optional[dict] = None
         self._tstate: Optional[dict] = None
+        self._tierstate: Optional[dict] = None
 
     def sample_bank(self, pipelines: Sequence[Pipeline]) -> SampleBank:
         """A :class:`SampleBank` for common-random-number runs."""
@@ -552,8 +576,25 @@ class ClusterEngine:
                     "only; time-sliced/partitioned DSAs with power "
                     "cycling are future work")
 
+        tier = self.tier
+        tier_on = tier is not None and tier.enabled
+        if tier_on:
+            if sk != 0:
+                raise NotImplementedError(
+                    "the tiered data layer composes with the FCFS drive "
+                    "scheduler only; cache/replica routing under time-"
+                    "sliced or partitioned DSAs is future work")
+            if self.n_dscs < 1:
+                raise ValueError("the tiered data layer needs n_dscs >= 1")
+        self._tierstate = None
+
         ss = np.random.SeedSequence(self.seed)
-        arr_rng, rng = (np.random.default_rng(s) for s in ss.spawn(2))
+        # SeedSequence children are keyed by index, so the first two
+        # children are identical whether or not a third (tier) child is
+        # spawned — tier-off runs keep the exact golden-trace streams
+        kids = ss.spawn(3 if tier_on else 2)
+        arr_rng, rng = (np.random.default_rng(s) for s in kids[:2])
+        tier_rng = np.random.default_rng(kids[2]) if tier_on else None
         src: Optional[np.ndarray] = None
         if mt:
             merged = MergedArrivals(
@@ -603,7 +644,12 @@ class ClusterEngine:
             [nd > 0 and is_acceleratable(p) for p in pipelines], dtype=bool)
         picks_l = picks.tolist()
         accel_l = (accel_pipe[picks].tolist() if n else [])
-        drive_l = (_placement(nd, n).tolist() if nd and n else [-1] * n)
+        if nd and n and not tier_on:
+            drive_l = _placement(nd, n).tolist()
+        else:
+            # tier on: drive_l is the replica-choice column, written at
+            # arrival time by the replica router below (-1 until routed)
+            drive_l = [-1] * n
 
         # -- per-request SoA state ------------------------------------------
         ds_l = [0] * n                  # DSCS-copy state codes
@@ -652,6 +698,43 @@ class ClusterEngine:
         rec_d = rec_c = 0.0             # reclaimed service-seconds per class
         t_switch_s = 0.0                # time-slice context-switch overhead
         t_pre = 0                       # quantum-expiry events processed
+
+        # -- tiered data-layer state (tiering.py) ----------------------------
+        # Replica routing replaces the memoized single-hash placement:
+        # drive_l becomes the replica-choice column of the SoA state,
+        # written per arrival from the object's replica set.
+        t_fill = 0                      # backing-store fetches (lazy fills)
+        fill_s = 0.0                    # backing-fetch seconds added
+        mig = None
+        mig_t = INF                     # next migration epoch boundary
+        if tier_on:
+            t_k = min(tier.replication_k, nd)
+            t_nobj = tier.n_objects
+            t_objbytes = tier.object_bytes
+            rb = [p.workload.request_bytes for p in pipelines]
+            if t_nobj:
+                obj_l = zipf_object_ids(n, t_nobj, tier.zipf_s,
+                                        tier_rng).tolist()
+                replicas = build_replica_table(t_nobj, nd, t_k)
+            else:
+                # one unique object per request: replica sets computed
+                # lazily at arrival (object id = request id)
+                obj_l = None
+                replicas = {}
+            # primary copies are durably materialized up front; secondary
+            # and migrated-to drives fill lazily from the backing store
+            mat = [set() for _ in range(nd)]
+            if t_nobj:
+                for o2, r2 in enumerate(replicas):
+                    mat[r2[0]].add(o2)
+            caches = ([DriveCache(tier.cache_bytes, tier.admit_after)
+                       for _ in range(nd)]
+                      if tier.cache_bytes > 0 else None)
+            if tier.migration is not None:
+                mig = MigrationController(tier.migration)
+                mig_s = tier.migration.epoch_s
+                mig_t = mig_s
+                acc = [dict() for _ in range(nd)]  # per-drive obj hits/epoch
 
         # -- per-tenant state (multi-tenant runs only) -----------------------
         if mt:
@@ -738,6 +821,32 @@ class ClusterEngine:
             ep_t = INF
 
         # -- dispatch helpers ------------------------------------------------
+        if tier_on:
+            lm_bf = self.lm.backing_fetch
+            lm_chs = self.lm.cache_hit_savings
+            _sav: Dict[int, float] = {}     # size -> cache-hit savings
+
+            def tier_adjust(rid2: int, d2: int, svc: float) -> float:
+                """Tier effects on one DSCS service start: a first access
+                on a drive the object isn't materialized on pays the
+                backing-store fill; a DRAM cache hit subtracts the
+                flash-P2P + NS-driver savings."""
+                nonlocal t_fill, fill_s
+                o = obj_l[rid2] if obj_l is not None else rid2
+                sz = t_objbytes or rb[picks_l[rid2]]
+                m = mat[d2]
+                if o not in m:
+                    f = lm_bf(sz)
+                    svc += f
+                    fill_s += f; t_fill += 1
+                    m.add(o)
+                if caches is not None and caches[d2].access(o, sz):
+                    sav = _sav.get(sz)
+                    if sav is None:
+                        sav = lm_chs(sz); _sav[sz] = sav
+                    svc -= sav
+                return svc if svc > 1e-9 else 1e-9
+
         def start_drive(d: int, t: float) -> None:
             nonlocal t_tomb, s_i, d_busy_s
             dq = d_queues[d]
@@ -757,6 +866,8 @@ class ClusterEngine:
                 s_i = i + 1
                 c = coef_d[picks_l[r2]]
                 svc = c[0] + c[1] * s_tr[i] + c[2] * s_tw[i]
+                if tier_on:
+                    svc = tier_adjust(r2, d, svc)
                 d_busy_s += svc
                 d_start_a[r2] = t; d_svc_a[r2] = svc
                 d_busy[d] = 1
@@ -972,8 +1083,8 @@ class ClusterEngine:
         while True:
             ft = heap[0][0] if heap else INF
             ht = hedge_dq[0][0] if hedge_dq else INF
-            if ep_t <= ft and ep_t <= ht and ep_t < next_t and (
-                    next_t != INF or heap or hedge_dq):
+            if ep_t <= ft and ep_t <= ht and ep_t <= mig_t and \
+                    ep_t < next_t and (next_t != INF or heap or hedge_dq):
                 # epoch boundary: snapshot telemetry, apply the controller's
                 # action.  Fires before same-time dynamic events, after
                 # same-time arrivals, and stops once the fleet has drained.
@@ -1052,6 +1163,21 @@ class ClusterEngine:
                                 d_on_ivals.append((d_on_since[d], t))
                                 d_on_since[d] = -1.0
                 ep_t += ep_s
+                continue
+            if mig_t <= ft and mig_t <= ht and mig_t < ep_t and \
+                    mig_t < next_t and (next_t != INF or heap or hedge_dq):
+                # hot-key migration epoch: rebalance the replica table from
+                # the live per-drive backlogs and this epoch's access
+                # counts.  A moved key only retargets *routing* — the
+                # durable copy materializes on its new drive through a
+                # backing-store fetch on first access, like a lazy replica.
+                for o2, frm, to in mig.plan(mig_t, d_qd, d_busy, acc,
+                                            replicas):
+                    r2 = replicas[o2]
+                    r2[r2.index(frm)] = to
+                for a2 in acc:
+                    a2.clear()
+                mig_t += mig_s
                 continue
             if ht <= ft:
                 if ht < next_t:         # hedge timer fires
@@ -1254,7 +1380,41 @@ class ClusterEngine:
             if mt:
                 tarr[ten_l[rid]] += 1
             if accel_l[rid]:
-                d = drive_l[rid]
+                if tier_on:
+                    # replica routing: among the object's replica drives
+                    # prefer powered, then least-loaded, then cache-warm
+                    # (lowest drive index on ties).  Load outranks warmth:
+                    # a cache hit saves ~ms while a queued copy costs a
+                    # full service time, so warmth-first would pile every
+                    # hot-key request back onto one drive and recreate
+                    # exactly the hotspot replication exists to dissolve
+                    if obj_l is not None:
+                        o = obj_l[rid]
+                        reps = replicas[o]
+                    else:
+                        o = rid
+                        reps = replicas.get(o)
+                        if reps is None:
+                            reps = _hrw_ranking(f"req-{rid}", nd)[:t_k]
+                            replicas[o] = reps
+                            mat[reps[0]].add(o)
+                    d = reps[0]
+                    if len(reps) > 1:
+                        best = None
+                        for d2 in reps:
+                            key2 = (1 if (dyn and not d_power[d2]) else 0,
+                                    d_qd[d2] + d_busy[d2],
+                                    0 if (caches is not None
+                                          and caches[d2].warm(o)) else 1,
+                                    d2)
+                            if best is None or key2 < best:
+                                best = key2; d = d2
+                    drive_l[rid] = d
+                    if mig is not None:
+                        a2 = acc[d]
+                        a2[o] = a2.get(o, 0) + 1
+                else:
+                    d = drive_l[rid]
                 t_ddisp += 1
                 if hedge is not None:
                     hedge_dq.append((t + hedge, rid))
@@ -1319,6 +1479,8 @@ class ClusterEngine:
                         s_i = i + 1
                         c = coef_d[picks_l[rid]]
                         svc = c[0] + c[1] * s_tr[i] + c[2] * s_tw[i]
+                        if tier_on:
+                            svc = tier_adjust(rid, d, svc)
                         d_busy_s += svc
                         d_start_a[rid] = t; d_svc_a[rid] = svc
                         d_busy[d] = 1
@@ -1397,6 +1559,36 @@ class ClusterEngine:
             }
         else:
             self._tstate = None
+
+        # -- tiered data-layer telemetry -------------------------------------
+        if tier_on:
+            cs = [c.stats() for c in caches] if caches is not None else []
+            hits = sum(s["hits"] for s in cs)
+            misses = sum(s["misses"] for s in cs)
+            self._tierstate = {
+                "replication_k": t_k,
+                "n_objects": t_nobj if t_nobj else n,
+                "cache_bytes": tier.cache_bytes,
+                "cache": {
+                    "hits": hits, "misses": misses,
+                    "hit_rate": (hits / (hits + misses)
+                                 if hits + misses else 0.0),
+                    "evictions": sum(s["evictions"] for s in cs),
+                    "per_drive": cs,
+                },
+                "backing_fetches": t_fill,
+                "backing_s": fill_s,
+                "migration": (None if mig is None else
+                              {"moves": mig.moves, "epochs": mig.epochs,
+                               "log": list(mig.log)}),
+            }
+            for nm, v in (("cache_hits", hits), ("cache_misses", misses),
+                          ("backing_fetches", t_fill),
+                          ("backing_fetch_s", fill_s),
+                          ("migration_moves",
+                           0 if mig is None else mig.moves)):
+                if v:
+                    self.telemetry.inc(nm, v)
 
         # -- flush telemetry -------------------------------------------------
         inc = self.telemetry.inc
@@ -1478,6 +1670,20 @@ class ClusterEngine:
             return {"horizon": 0.0, "dscs": dict(zero), "cpu": dict(zero),
                     "wake_events": 0, "epochs": 0}
         return self._pstate
+
+    def tier_stats(self) -> Optional[Dict[str, object]]:
+        """Tiered data-layer telemetry from the last run (``None`` when the
+        tier was absent or disabled).
+
+        Keys: ``replication_k`` (effective factor), ``n_objects``,
+        ``cache_bytes``; ``cache`` with aggregate ``hits``/``misses``/
+        ``hit_rate``/``evictions`` plus ``per_drive`` stat dicts;
+        ``backing_fetches``/``backing_s`` (lazy replica + migration fills
+        from the remote backing store); and ``migration`` (``None`` without
+        a controller, else its ``moves``/``epochs`` counters and the
+        ``(t, obj, from, to)`` move ``log``).
+        """
+        return self._tierstate
 
     def tenant_stats(self) -> Optional[Dict[str, object]]:
         """Per-tenant telemetry from the last multi-tenant run (``None``

@@ -51,6 +51,13 @@ class LatencyParams:
     image_unpack_s: float = 0.08
     health_check_s: float = 0.04
     preprocess_flops_per_byte: float = 60.0
+    # tiered data layer (tiering.py): a cache hit serves the payload from
+    # drive DRAM instead of flash P2P + NS driver; a cache fill pulls the
+    # object from the remote backing store (S3-class bandwidth).
+    cache_dram_bw: float = 12e9         # B/s drive-DRAM payload read
+    cache_hit_base_s: float = 2e-5      # lookup + DMA setup on a hit
+    backing_base_s: float = 15e-3       # backing object-store RTT
+    backing_bw: float = 80e6            # B/s backing-store GET
 
 
 @dataclass
@@ -91,6 +98,25 @@ class LatencyModel:
     def p2p(self, nbytes: int) -> float:
         return self.params.p2p_base_s + nbytes / PCIE_GBPS[self.pcie_lanes]
 
+    # --- tiered data layer (tiering.py) --------------------------------------
+    def dram_read(self, nbytes: int) -> float:
+        """Serve a cached payload from drive DRAM (the cache-hit read)."""
+        p = self.params
+        return p.cache_hit_base_s + nbytes / p.cache_dram_bw
+
+    def cache_hit_savings(self, nbytes: int) -> float:
+        """Service-time delta of a DRAM cache hit on the near-storage read
+        path: the flash P2P transfer and the NS driver invocation are
+        replaced by a DRAM read.  Never negative."""
+        return max(0.0, self.p2p(nbytes) + self.params.driver_s
+                   - self.dram_read(nbytes))
+
+    def backing_fetch(self, nbytes: int) -> float:
+        """One-time cost of materializing an object from the remote backing
+        store onto a drive (lazy replica / migration fill)."""
+        p = self.params
+        return p.backing_base_s + nbytes / p.backing_bw
+
     # --- compute -------------------------------------------------------------
     def compute_s(self, plat: Platform, wl: Workload, batch: int = 1,
                   dsa_cfg: Optional[DSAConfig] = None) -> float:
@@ -121,9 +147,13 @@ class LatencyModel:
                            batch: int = 1, q: Optional[float] = 0.5,
                            dsa_cfg: Optional[DSAConfig] = None,
                            extra_accel_funcs: int = 0,
-                           cold: bool = False) -> Dict[str, float]:
+                           cold: bool = False,
+                           cache_hit: bool = False) -> Dict[str, float]:
         """Latency breakdown for the 3-function pipeline (Fig. 2) on one
         platform.  Returns component -> seconds (Fig. 4 / Fig. 9 analogue).
+
+        ``cache_hit`` (near-storage only) serves the request payload from
+        the drive's DRAM cache instead of flash P2P + NS driver.
         """
         p = self.params
         bd: Dict[str, float] = {"stack": 0.0, "net": 0.0, "io": 0.0,
@@ -151,8 +181,11 @@ class LatencyModel:
             # near-storage: f1+f2 run at the drive over P2P; no network for
             # intermediates
             bd["stack"] += p.stack_s                 # dispatch to storage node
-            bd["io"] += self.p2p(inp)
-            bd["driver"] += p.driver_s
+            if cache_hit:
+                bd["io"] += self.dram_read(inp)      # payload from drive DRAM
+            else:
+                bd["io"] += self.p2p(inp)
+                bd["driver"] += p.driver_s
             bd["compute"] += self.preprocess_s(plat, wl, batch)
             for _ in range(1 + extra_accel_funcs):
                 bd["compute"] += self.compute_s(plat, wl, batch, dsa_cfg)

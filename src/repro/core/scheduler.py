@@ -53,13 +53,16 @@ from repro.core.tenancy import (DriveScheduler,  # noqa: F401
                                 FCFSRunToCompletion, SpatialPartition,
                                 TenantReport, TenantSpec, WeightedTimeSlice,
                                 jain_index, tenant_reports)
+from repro.core.tiering import (DriveCache, MigrationPolicy,  # noqa: F401
+                                TierConfig)
 
 __all__ = ["AutoscaleAction", "AutoscalePolicy", "AutoscaleReport",
-           "ClusterSim", "DriveScheduler", "EWMAPolicy",
-           "FCFSRunToCompletion", "FleetSnapshot", "ReactivePolicy",
-           "RequestResult", "SpatialPartition", "StaticPolicy", "Telemetry",
-           "TenantReport", "TenantSpec", "WeightedTimeSlice",
-           "WorstTenantPolicy", "jain_index", "tenant_reports"]
+           "ClusterSim", "DriveCache", "DriveScheduler", "EWMAPolicy",
+           "FCFSRunToCompletion", "FleetSnapshot", "MigrationPolicy",
+           "ReactivePolicy", "RequestResult", "SpatialPartition",
+           "StaticPolicy", "Telemetry", "TenantReport", "TenantSpec",
+           "TierConfig", "WeightedTimeSlice", "WorstTenantPolicy",
+           "jain_index", "tenant_reports"]
 
 
 class ClusterSim:
@@ -69,18 +72,20 @@ class ClusterSim:
 
     def __init__(self, *, n_dscs: int = 100, n_cpu: int = 100,
                  latency_model: Optional[LatencyModel] = None,
-                 hedge_budget_s: Optional[float] = None, seed: int = 0):
+                 hedge_budget_s: Optional[float] = None, seed: int = 0,
+                 tier: Optional[TierConfig] = None):
         self.lm = latency_model or LatencyModel(seed=seed)
         self.pool = StoragePool(n_plain=64, n_dscs=n_dscs)
         self.n_dscs = n_dscs
         self.n_cpu = n_cpu
         self.hedge_budget_s = hedge_budget_s
         self.seed = seed
+        self.tier = tier
         self.telemetry = Telemetry()
         self.engine = ClusterEngine(
             n_dscs=n_dscs, n_cpu=n_cpu, latency_model=self.lm,
             hedge_budget_s=hedge_budget_s, seed=seed,
-            telemetry=self.telemetry)
+            telemetry=self.telemetry, tier=tier)
 
     def run(self, pipelines: List[Pipeline], *, rps: Optional[float] = None,
             duration_s: float = 120.0,
@@ -103,6 +108,12 @@ class ClusterSim:
     def queue_stats(self):
         """Queue-depth telemetry from the most recent ``run``."""
         return self.engine.queue_stats()
+
+    def tier_stats(self):
+        """Tiered data-layer telemetry from the most recent run (``None``
+        when the sim was built without an enabled
+        :class:`~repro.core.tiering.TierConfig`)."""
+        return self.engine.tier_stats()
 
     # -- multi-tenancy (ROADMAP item; see repro.core.tenancy) ----------------
     def run_tenants(self, tenants: Sequence[TenantSpec], *,

@@ -184,6 +184,83 @@ def test_placement_spreads_requests():
     assert len(drives) == 8               # independent requests spread out
 
 
+def test_placement_overwrite_accounting_exact():
+    # the seed double-counted used_bytes on overwrite; it must stay exact
+    pool = StoragePool(n_plain=0, n_dscs=2)
+    d1 = pool.place("k", 1000, "Acceleratable_Storage")
+    d2 = pool.place("k", 400, "Acceleratable_Storage")   # shrink in place
+    assert d2 is d1
+    assert d1.used_bytes == 400
+    pool.place("k", 2500, "Acceleratable_Storage")       # grow in place
+    assert d1.used_bytes == 2500
+    assert sum(d.used_bytes for d in pool.drives) == 2500
+    pool.remove("k")
+    assert sum(d.used_bytes for d in pool.drives) == 0
+    assert pool.locate("k") is None
+
+
+def test_placement_payload_cap_enforced():
+    # the seed asserted against a nonexistent "request" class — dead code;
+    # the 256 KB cap must now be a live ValueError for request payloads
+    from repro.core.placement import MAX_PAYLOAD_BYTES
+    pool = StoragePool(n_plain=2, n_dscs=2)
+    with pytest.raises(ValueError, match="cap"):
+        pool.place("big", MAX_PAYLOAD_BYTES + 1, "Acceleratable_Storage")
+    # at the cap is fine, and non-request classes are uncapped
+    pool.place("ok", MAX_PAYLOAD_BYTES, "Acceleratable_Storage")
+    pool.place("model", MAX_PAYLOAD_BYTES * 4, "Standard")
+
+
+def test_placement_capacity_spills_to_least_full():
+    import hashlib
+    pool = StoragePool(n_plain=0, n_dscs=3, capacity_bytes=1000)
+    # fill the drive "spill" hashes to, then place it: it must land on the
+    # least-full drive that fits instead of overfilling
+    h = int(hashlib.sha1(b"spill").hexdigest(), 16)
+    target = pool.drives[h % 3]
+    target.put("filler", 950)
+    d = pool.place("spill", 200, "Acceleratable_Storage")
+    assert d is not target
+    assert d.used_bytes <= 1000
+    # a pool with no room anywhere raises
+    for dr in pool.drives:
+        dr.put(f"pad-{dr.drive_id}", 1000 - dr.used_bytes)
+    with pytest.raises(ValueError, match="no .* drive"):
+        pool.place("nope", 1, "Acceleratable_Storage")
+    # Drive.put itself refuses to overfill
+    with pytest.raises(ValueError, match="over capacity"):
+        pool.drives[0].put("extra", 1)
+
+
+def test_placement_locate_index_matches_scan():
+    pool = StoragePool(n_plain=2, n_dscs=4)
+    for i in range(64):
+        pool.place(f"k{i}", 10, "Acceleratable_Storage")
+    for i in range(64):
+        via_index = pool.locate(f"k{i}")
+        via_scan = next(d for d in pool.drives if d.has(f"k{i}"))
+        assert via_index is via_scan
+    # keys put directly on a drive (bypassing place) still resolve
+    pool.drives[0].put("direct", 5)
+    assert pool.locate("direct") is pool.drives[0]
+
+
+def test_placement_replica_sets_distinct_and_deterministic():
+    pool = StoragePool(n_plain=2, n_dscs=6)
+    for i in range(32):
+        reps = pool.replicas(f"obj-{i}", 3)
+        assert len(reps) == 3
+        assert len({d.drive_id for d in reps}) == 3
+        assert all(d.dscs_capable for d in reps)
+        again = pool.replicas(f"obj-{i}", 3)
+        assert [d.drive_id for d in reps] == [d.drive_id for d in again]
+        # top-k is a prefix of top-(k+1): rendezvous hashing's stability
+        wider = pool.replicas(f"obj-{i}", 4)
+        assert [d.drive_id for d in wider[:3]] == [d.drive_id for d in reps]
+    with pytest.raises(ValueError):
+        pool.replicas("x", 0)
+
+
 @pytest.mark.slow
 def test_executor_runs_all_workloads():
     import jax

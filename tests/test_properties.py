@@ -88,6 +88,31 @@ def test_max_throughput_monotone_in_n_dscs(pair):
     assert hi >= lo - 1e-9
 
 
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 9), st.integers(0, 5000)),
+                min_size=1, max_size=60),
+       st.integers(2, 6))
+def test_storage_accounting_exact_under_put_overwrite(ops, n_dscs):
+    """sum(drive.used_bytes) always equals the live object total, under
+    arbitrary put/overwrite sequences (the seed double-counted every
+    overwrite, drifting used_bytes away from reality)."""
+    pool = StoragePool(n_plain=2, n_dscs=n_dscs)
+    live = {}
+    for key_id, size in ops:
+        key = f"k{key_id}"
+        pool.place(key, size, "Acceleratable_Storage")
+        live[key] = size
+    assert sum(d.used_bytes for d in pool.drives) == sum(live.values())
+    # per-drive accounting agrees with each drive's own object map
+    for d in pool.drives:
+        assert d.used_bytes == sum(d.objects.values())
+    # every live key is exactly on one drive, findable via the index
+    for key, size in live.items():
+        holders = [d for d in pool.drives if d.has(key)]
+        assert len(holders) == 1
+        assert pool.locate(key) is holders[0]
+
+
 @settings(max_examples=20, deadline=None)
 @given(st.integers(2, 6), st.integers(2, 50))
 def test_placement_deterministic_and_class_respecting(n_dscs, n_obj):

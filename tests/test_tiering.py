@@ -1,0 +1,249 @@
+"""Tiered data layer (tiering.py + the engine's tier path): per-drive
+DRAM caches, k-way replica routing, backing-store fills, hot-key
+migration — and the bit-exactness guarantee when the tier is disabled."""
+import numpy as np
+import pytest
+
+from repro.core.arrivals import PoissonProcess
+from repro.core.engine import ClusterEngine
+from repro.core.function import standard_pipeline
+from repro.core.placement import StoragePool
+from repro.core.scheduler import ClusterSim
+from repro.core.tenancy import TenantSpec, WeightedTimeSlice
+from repro.core.tiering import (DriveCache, MigrationController,
+                                MigrationPolicy, TierConfig,
+                                build_replica_table, zipf_object_ids)
+
+PIPES = [standard_pipeline("content_moderation"),
+         standard_pipeline("credit_risk")]
+
+
+# ---------------------------------------------------------------- DriveCache
+def test_cache_lru_eviction_order():
+    c = DriveCache(capacity_bytes=300)
+    for k in (0, 1, 2):
+        assert not c.access(k, 100)     # cold misses, all admitted
+    assert c.access(0, 100)             # hit refreshes 0 to MRU
+    c.access(3, 100)                    # evicts LRU = 1
+    assert 0 in c and 2 in c and 3 in c and 1 not in c
+    assert c.used_bytes == 300
+    assert c.evictions == 1
+
+
+def test_cache_frequency_admission():
+    c = DriveCache(capacity_bytes=100, admit_after=2)
+    assert not c.access(7, 50)          # first sighting: not admitted
+    assert 7 not in c
+    assert not c.access(7, 50)          # second sighting: admitted (miss)
+    assert 7 in c
+    assert c.access(7, 50)              # now a hit
+    s = c.stats()
+    assert s["hits"] == 1 and s["misses"] == 2 and s["rejected"] == 1
+
+
+def test_cache_warm_peek_does_not_mutate():
+    c = DriveCache(capacity_bytes=200)
+    c.access(0, 100)
+    c.access(1, 100)
+    assert c.warm(0) and c.warm(1) and not c.warm(2)
+    # warm() peeks: LRU order stays 0 (oldest), 1 — inserting evicts 0
+    c.warm(0)
+    c.access(2, 100)
+    assert 0 not in c and 1 in c
+
+
+def test_cache_oversize_object_never_admitted():
+    c = DriveCache(capacity_bytes=100)
+    assert not c.access(0, 101)
+    assert 0 not in c and c.used_bytes == 0
+
+
+# ------------------------------------------------- Zipf + replica table
+def test_zipf_object_ids_skew_and_determinism():
+    rng1 = np.random.default_rng(3)
+    rng2 = np.random.default_rng(3)
+    a = zipf_object_ids(20_000, 64, 1.2, rng1)
+    b = zipf_object_ids(20_000, 64, 1.2, rng2)
+    assert np.array_equal(a, b)
+    assert a.min() >= 0 and a.max() < 64
+    counts = np.bincount(a, minlength=64)
+    assert counts[0] == counts.max()    # object 0 is the hottest
+    assert counts[0] > 0.15 * a.size    # s=1.2 top share ~25%
+    # uniform (s=0) is far flatter
+    flat = zipf_object_ids(20_000, 64, 0.0, np.random.default_rng(3))
+    assert np.bincount(flat, minlength=64).max() < counts[0]
+
+
+def test_replica_table_matches_storage_pool_hrw():
+    nd, k = 6, 3
+    table = build_replica_table(32, nd, k)
+    pool = StoragePool(n_plain=2, n_dscs=nd)
+    dscs = pool.dscs_drives()
+    for o, reps in enumerate(table):
+        assert len(reps) == k and len(set(reps)) == k
+        want = [dscs.index(d) for d in pool.replicas(f"obj-{o}", k)]
+        assert reps == want
+
+
+def test_migration_controller_plans_hot_to_cold():
+    mc = MigrationController(MigrationPolicy(max_moves_per_epoch=2,
+                                             min_queue_imbalance=3))
+    replicas = [[0], [0], [2]]
+    access = [{0: 10, 1: 4}, {}, {2: 1}, {}]
+    moves = mc.plan(1.0, [8, 0, 1, 0], [1, 0, 0, 0], access, replicas)
+    # hottest key first, to the coldest drive not already holding it
+    assert moves == [(0, 0, 1), (1, 0, 1)]
+    assert mc.moves == 2
+    # below the imbalance threshold: no moves
+    assert mc.plan(2.0, [2, 0, 1, 0], [0, 0, 0, 0], access, replicas) == []
+
+
+def test_tier_config_validation():
+    with pytest.raises(ValueError):
+        TierConfig(replication_k=0).validate()
+    with pytest.raises(ValueError):
+        TierConfig(cache_bytes=-1).validate()
+    with pytest.raises(ValueError):
+        MigrationPolicy(epoch_s=0.0).validate()
+    assert not TierConfig().enabled
+    assert TierConfig(replication_k=2).enabled
+    assert TierConfig(cache_bytes=1).enabled
+    assert TierConfig(migration=MigrationPolicy()).enabled
+
+
+# ------------------------------------------------------- engine integration
+def test_disabled_tier_bit_identical_to_no_tier():
+    """A None tier and a disabled TierConfig take the same code path:
+    identical rng streams, event order and RequestResult columns."""
+    for seed in (13, 21):
+        arr = PoissonProcess(rate=150.0)
+        t1 = ClusterEngine(n_dscs=4, n_cpu=6, seed=seed,
+                           hedge_budget_s=0.25).run_soa(
+            PIPES, arrivals=arr, duration_s=5.0)
+        eng = ClusterEngine(n_dscs=4, n_cpu=6, seed=seed,
+                            hedge_budget_s=0.25, tier=TierConfig())
+        t2 = eng.run_soa(PIPES, arrivals=arr, duration_s=5.0)
+        for f in ("arrival", "finish", "winner", "drive", "start",
+                  "service", "hedged", "dscs_finish", "cpu_finish"):
+            a, b = getattr(t1, f), getattr(t2, f)
+            assert np.array_equal(a, b, equal_nan=(a.dtype.kind == "f"))
+        assert eng.tier_stats() is None
+
+
+def test_replication_routes_within_replica_sets():
+    nobj, nd, k = 32, 4, 2
+    tier = TierConfig(replication_k=k, n_objects=nobj, zipf_s=1.1)
+    eng = ClusterEngine(n_dscs=nd, n_cpu=4, seed=5, tier=tier)
+    trace = eng.run_soa(PIPES, arrivals=PoissonProcess(rate=150.0),
+                        duration_s=5.0)
+    table = build_replica_table(nobj, nd, k)
+    # reconstruct the object draws: same child rng stream as the engine's
+    kids = np.random.SeedSequence(5).spawn(3)
+    objs = zipf_object_ids(trace.n, nobj, 1.1, np.random.default_rng(kids[2]))
+    dscs_served = trace.winner == 0
+    assert int(dscs_served.sum()) > 0
+    for rid in np.flatnonzero(dscs_served):
+        assert int(trace.drive[rid]) in table[int(objs[rid])]
+
+
+def test_replication_spreads_hot_object_and_cuts_p99():
+    """One Zipf-hot object saturates a single drive at k=1; k=2 plus a
+    warm cache must spread it and cut the hot-drive p99 (the fig22
+    claim, at test scale)."""
+    pipes = [standard_pipeline("asset_damage")]
+    arr = PoissonProcess(rate=76.0)
+    kw = dict(n_dscs=8, n_cpu=8, seed=0)
+
+    def hot_p99(tier):
+        trace = ClusterEngine(tier=tier, **kw).run_soa(
+            pipes, arrivals=arr, duration_s=12.0)
+        drv = trace.drive
+        hot = np.argmax(np.bincount(drv[drv >= 0], minlength=8))
+        lat = trace.latency[drv == hot]
+        return float(np.percentile(lat, 99))
+
+    base = hot_p99(TierConfig(replication_k=1, n_objects=256, zipf_s=1.2))
+    tiered = hot_p99(TierConfig(replication_k=2, cache_bytes=64 << 20,
+                                admit_after=2, n_objects=256, zipf_s=1.2))
+    assert tiered < base / 2
+
+
+def test_cache_hits_recorded_and_shorten_service():
+    tier = TierConfig(cache_bytes=256 << 20, n_objects=8, zipf_s=1.0)
+    eng = ClusterEngine(n_dscs=2, n_cpu=2, seed=3, tier=tier)
+    eng.run_soa(PIPES, arrivals=PoissonProcess(rate=100.0), duration_s=4.0)
+    st = eng.tier_stats()
+    assert st["cache"]["hits"] > 0
+    assert 0.0 < st["cache"]["hit_rate"] <= 1.0
+    assert eng.telemetry.get("cache_hits") == st["cache"]["hits"]
+    # hits shorten the mean DSCS service vs the cache-less run
+    no_cache = ClusterEngine(n_dscs=2, n_cpu=2, seed=3,
+                             tier=TierConfig(n_objects=8, zipf_s=1.0))
+    ta = eng.run_soa(PIPES, arrivals=PoissonProcess(rate=100.0),
+                     duration_s=4.0)
+    tb = no_cache.run_soa(PIPES, arrivals=PoissonProcess(rate=100.0),
+                          duration_s=4.0)
+    da, db = ta.winner == 0, tb.winner == 0
+    assert float(ta.service[da].mean()) < float(tb.service[db].mean())
+
+
+def test_secondary_replicas_pay_backing_fetch():
+    # k=2: routed-to secondaries materialize lazily from the backing store
+    tier = TierConfig(replication_k=2, n_objects=16, zipf_s=1.0)
+    eng = ClusterEngine(n_dscs=4, n_cpu=4, seed=11, tier=tier)
+    eng.run_soa(PIPES, arrivals=PoissonProcess(rate=200.0), duration_s=4.0)
+    st = eng.tier_stats()
+    assert 0 < st["backing_fetches"] <= 16   # at most one fill per replica
+    assert st["backing_s"] > 0.0
+
+
+def test_migration_moves_hot_keys_off_saturated_drive():
+    tier = TierConfig(n_objects=16, zipf_s=1.5,
+                      migration=MigrationPolicy(epoch_s=0.5,
+                                                min_queue_imbalance=2))
+    eng = ClusterEngine(n_dscs=4, n_cpu=4, seed=7, tier=tier)
+    eng.run_soa(PIPES, arrivals=PoissonProcess(rate=300.0), duration_s=5.0)
+    st = eng.tier_stats()
+    mg = st["migration"]
+    assert mg["moves"] > 0 and mg["epochs"] > 0
+    assert len(mg["log"]) == mg["moves"]
+    for t, obj, frm, to in mg["log"]:
+        assert frm != to and 0 <= obj < 16
+    # migrated-to drives fill from the backing store on first access
+    assert st["backing_fetches"] > 0
+
+
+def test_tier_composes_with_multi_tenant_fcfs():
+    tenants = [
+        TenantSpec("a", tuple(PIPES), PoissonProcess(rate=50.0),
+                   sla_s=0.5, weight=1.0),
+        TenantSpec("b", tuple(PIPES), PoissonProcess(rate=50.0),
+                   sla_s=1.0, weight=1.0),
+    ]
+    sim = ClusterSim(n_dscs=4, n_cpu=4, seed=0,
+                     tier=TierConfig(replication_k=2, cache_bytes=64 << 20,
+                                     n_objects=32))
+    trace, reps = sim.run_tenants(tenants, duration_s=4.0)
+    assert len(reps) == 2 and trace.n > 0
+    assert sim.tier_stats()["cache"]["hits"] > 0
+
+
+def test_tier_rejects_non_fcfs_schedulers():
+    tenants = [TenantSpec("a", tuple(PIPES), PoissonProcess(rate=20.0),
+                          sla_s=0.5, weight=1.0)]
+    sim = ClusterSim(n_dscs=2, n_cpu=2, seed=0,
+                     tier=TierConfig(replication_k=2, n_objects=8))
+    with pytest.raises(NotImplementedError, match="FCFS"):
+        sim.run_tenants(tenants, duration_s=2.0,
+                        scheduler=WeightedTimeSlice(quantum_s=0.01,
+                                                    switch_s=0.001))
+
+
+def test_tier_composes_with_autoscaling():
+    from repro.core.autoscale import ReactivePolicy, evaluate_policy
+    rep = evaluate_policy(
+        ReactivePolicy(), PIPES, arrivals=PoissonProcess(rate=100.0),
+        duration_s=6.0, n_dscs=4, n_cpu=6, sla_s=0.6, seed=2,
+        tier=TierConfig(replication_k=2, cache_bytes=64 << 20, n_objects=32))
+    assert rep.n_requests > 0
+    assert 0.0 <= rep.sla_frac <= 1.0
