@@ -119,9 +119,16 @@ def main(argv=None) -> None:
 
     if not args.as_json:
         print("name,us_per_call,derived")
+    failures = []
     for fig in figures:
         t0 = time.perf_counter()
-        rows = fig()
+        try:
+            rows = fig()
+        except Exception as exc:        # noqa: BLE001 - report, then fail run
+            failures.append(fig.__name__)
+            print(f"FAILED {fig.__name__}: {type(exc).__name__}: {exc}",
+                  file=sys.stderr)
+            continue
         dt = (time.perf_counter() - t0) * 1e6
         for name, val, derived in rows:
             emit(name, val, derived)
@@ -134,6 +141,11 @@ def main(argv=None) -> None:
     if args.as_json:
         json.dump(collected, sys.stdout, indent=2)
         print()
+    if failures:
+        # exit non-zero so CI smoke gates never read a partial sweep as
+        # a pass; the JSON above is still complete for what did run
+        raise SystemExit(f"{len(failures)} figure(s) failed: "
+                         + ", ".join(failures))
 
 
 if __name__ == "__main__":

@@ -46,9 +46,11 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.core.arrivals import ArrivalProcess
-from repro.core.cost import ELECTRICITY_USD_PER_KWH, rental_rate_usd_per_s
+from repro.core.cost import (ELECTRICITY_USD_PER_KWH, REPAIR_USD_PER_GB,
+                             rental_rate_usd_per_s)
 from repro.core.energy import node_power_w
 from repro.core.engine import ClusterEngine, FleetSnapshot
+from repro.core.faults import FaultPlan
 from repro.core.function import Pipeline, is_acceleratable
 from repro.core.latency import LatencyModel
 from repro.core.platforms import (CPU_FALLBACK_PLATFORM, DSCS_PLATFORM,
@@ -285,20 +287,25 @@ def fleet_energy_j(power_stats: Dict[str, object]) -> Dict[str, float]:
     return out
 
 
-def fleet_cost_usd(power_stats: Dict[str, object],
-                   energy_j: float) -> Dict[str, float]:
+def fleet_cost_usd(power_stats: Dict[str, object], energy_j: float,
+                   repair_bytes: float = 0.0) -> Dict[str, float]:
     """Fleet cost over the run: powered server-seconds priced at each
     platform's amortized CAPEX rental rate
     (:func:`repro.core.cost.rental_rate_usd_per_s`) plus metered
-    electricity for the consumed energy."""
+    electricity for the consumed energy, plus re-replication traffic
+    (``repair_bytes``, from the engine's ``fault_stats()``) priced at
+    :data:`repro.core.cost.REPAIR_USD_PER_GB` — so a policy that
+    power-cycles drives is charged for the repair bytes it triggers."""
     out = {
         "cpu_capex": (rental_rate_usd_per_s(PLATFORMS[CPU_FALLBACK_PLATFORM])
                       * float(power_stats["cpu"]["powered_s"])),
         "dscs_capex": (rental_rate_usd_per_s(PLATFORMS[DSCS_PLATFORM])
                        * float(power_stats["dscs"]["powered_s"])),
         "electricity": energy_j / 3.6e6 * ELECTRICITY_USD_PER_KWH,
+        "repair": repair_bytes / 1e9 * REPAIR_USD_PER_GB,
     }
-    out["total"] = out["cpu_capex"] + out["dscs_capex"] + out["electricity"]
+    out["total"] = (out["cpu_capex"] + out["dscs_capex"]
+                    + out["electricity"] + out["repair"])
     return out
 
 
@@ -325,6 +332,7 @@ class AutoscaleReport:
     energy_per_req_j: float
     cost_usd: float
     cost_per_sla_req_usd: float
+    repair_gb: float = 0.0
 
 
 def evaluate_policy(policy: AutoscalePolicy, pipelines: Sequence[Pipeline], *,
@@ -332,8 +340,9 @@ def evaluate_policy(policy: AutoscalePolicy, pipelines: Sequence[Pipeline], *,
                     n_dscs: int, n_cpu: int, sla_s: float,
                     hedge_budget_s: Optional[float] = None, seed: int = 0,
                     latency_model: Optional[LatencyModel] = None,
-                    dscs_wake_s: float = 0.2,
-                    tier=None) -> AutoscaleReport:
+                    dscs_wake_s: float = 0.2, tier=None,
+                    faults: Optional[FaultPlan] = None,
+                    timeout_s: Optional[float] = None) -> AutoscaleReport:
     """Run ``policy`` over a fresh engine and score it.
 
     ``n_dscs``/``n_cpu`` are the provisioned maxima the policy scales
@@ -343,27 +352,40 @@ def evaluate_policy(policy: AutoscalePolicy, pipelines: Sequence[Pipeline], *,
     ``tier`` optionally attaches a :class:`~repro.core.tiering.TierConfig`
     (replica routing prefers powered drives, so the tier composes with
     power cycling); ``None`` keeps the classic placement path.
+    ``faults`` attaches a :class:`~repro.core.faults.FaultPlan`; when its
+    repair model is enabled (and the tier carries an object catalog), a
+    policy decision that powers a drive off triggers the same replica
+    repair as a fail-stop, and those repair bytes are charged to the cost
+    scorecard (``repair_gb``, priced in :func:`fleet_cost_usd`) — power
+    cycling is no longer free.  ``timeout_s`` adds per-request deadlines;
+    abandoned requests never count as SLA-met.
     """
     policy.reset()
     eng = ClusterEngine(n_dscs=n_dscs, n_cpu=n_cpu,
                         latency_model=latency_model,
                         hedge_budget_s=hedge_budget_s, seed=seed,
-                        dscs_wake_s=dscs_wake_s, tier=tier)
+                        dscs_wake_s=dscs_wake_s, tier=tier, faults=faults)
     trace = eng.run_soa(pipelines, arrivals=arrivals, duration_s=duration_s,
-                        controller=policy)
+                        controller=policy, timeout_s=timeout_s)
     ps = eng.power_stats()
     energy = fleet_energy_j(ps)
-    cost = fleet_cost_usd(ps, energy["total"])
+    fstats = eng.fault_stats()
+    repair_bytes = (float(fstats["repair"]["bytes"])
+                    if fstats and fstats.get("enabled") else 0.0)
+    cost = fleet_cost_usd(ps, energy["total"], repair_bytes)
     n = trace.n
     lat = trace.latency
+    lat = lat[~np.isnan(lat)]           # abandoned requests: no latency
     sla_met = int(np.count_nonzero(lat <= sla_s)) if n else 0
     horizon = float(ps["horizon"])
     return AutoscaleReport(
         policy=getattr(policy, "name", type(policy).__name__),
         n_requests=n, sla_met=sla_met,
         sla_frac=sla_met / n if n else 1.0,
-        p50_s=float(np.percentile(lat, 50)) if n else 0.0,
-        p99_s=float(np.percentile(lat, 99)) if n else 0.0,
+        p50_s=(float(np.percentile(lat, 50)) if lat.size
+               else (0.0 if not n else math.inf)),
+        p99_s=(float(np.percentile(lat, 99)) if lat.size
+               else (0.0 if not n else math.inf)),
         horizon_s=horizon,
         mean_cpu_active=(float(ps["cpu"]["powered_s"]) / horizon
                          if horizon > 0 else 0.0),
@@ -374,4 +396,5 @@ def evaluate_policy(policy: AutoscalePolicy, pipelines: Sequence[Pipeline], *,
         energy_per_req_j=energy["total"] / n if n else 0.0,
         cost_usd=cost["total"],
         cost_per_sla_req_usd=(cost["total"] / sla_met if sla_met
-                              else math.inf))
+                              else math.inf),
+        repair_gb=repair_bytes / 1e9)

@@ -18,6 +18,11 @@ from repro.core.platforms import Platform, PLATFORMS
 from repro.core.workloads import Workload
 
 ELECTRICITY_USD_PER_KWH = 0.0733
+# re-replication traffic (replica repair after a drive failure or an
+# autoscaler power-down): cross-rack bytes priced like cloud intra-region
+# transfer — the autoscaling evaluation charges this per repaired GB so
+# aggressive drive power-cycling pays for the repair traffic it causes
+REPAIR_USD_PER_GB = 0.02
 T_YEARS = 3.0
 T_SECONDS = T_YEARS * 365.25 * 24 * 3600
 HOST_SHARE_USD = 7500.0          # shared node/server infrastructure

@@ -126,6 +126,9 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.arrivals import ArrivalProcess, MergedArrivals
+from repro.core.faults import (CPU_CRASH, CPU_RECOVER, DRIVE_FAIL,
+                               DRIVE_RECOVER, STALL_BEGIN, STALL_END,
+                               FaultPlan)
 from repro.core.function import Pipeline, is_acceleratable
 from repro.core.latency import LatencyModel, _erfinv
 from repro.core.platforms import (CPU_FALLBACK_PLATFORM, DSCS_PLATFORM,
@@ -324,7 +327,9 @@ class EngineTrace:
     """Structure-of-arrays view of one run — the engine's native output.
 
     One slot per arrival, in arrival order.  ``winner`` is 0 for the DSCS
-    path, 1 for the CPU path; ``drive`` is the serving DSCS drive index or
+    path, 1 for the CPU path, -1 for requests abandoned by a fault-retry
+    exhaustion or a ``timeout_s`` deadline (their ``finish`` is NaN);
+    ``drive`` is the serving DSCS drive index or
     -1 for CPU-served requests; ``dscs_finish``/``cpu_finish`` are NaN
     where the path never completed (maps to ``None`` in
     :class:`RequestResult`).  ``to_results()`` materializes the historical
@@ -349,8 +354,15 @@ class EngineTrace:
 
     @property
     def latency(self) -> np.ndarray:
-        """Per-request end-to-end latency vector (finish - arrival)."""
+        """Per-request end-to-end latency vector (finish - arrival).
+        NaN for requests abandoned by faults or deadlines."""
         return self.finish - self.arrival
+
+    @property
+    def completed(self) -> np.ndarray:
+        """Boolean mask of requests that finished (fault/deadline
+        abandonments have NaN finish and winner -1)."""
+        return ~np.isnan(self.finish)
 
     def to_results(self) -> List[RequestResult]:
         isnan = math.isnan
@@ -366,7 +378,8 @@ class EngineTrace:
             w = win[i]
             out.append(RequestResult(
                 arrival=arr[i], finish=fin[i], accelerated=w == 0,
-                hedged=hg[i], winner="dscs" if w == 0 else "cpu",
+                hedged=hg[i],
+                winner="dscs" if w == 0 else ("cpu" if w == 1 else ""),
                 drive=drv[i], start=st[i], service=sv[i],
                 dscs_finish=None if isnan(df[i]) else df[i],
                 cpu_finish=None if isnan(cf[i]) else cf[i],
@@ -447,7 +460,8 @@ class ClusterEngine:
                  telemetry: Optional[Telemetry] = None,
                  dscs_wake_s: float = 0.2,
                  preempt_losers: bool = False,
-                 tier: Optional[TierConfig] = None):
+                 tier: Optional[TierConfig] = None,
+                 faults: Optional[FaultPlan] = None):
         if n_cpu <= 0:
             raise ValueError("the fleet needs at least one CPU fallback node")
         self.n_dscs = n_dscs
@@ -470,11 +484,19 @@ class ClusterEngine:
         self.tier = tier
         if tier is not None:
             tier.validate()
+        # fault injection & recovery (faults.py): seeded drive/CPU failure
+        # processes, retry-with-backoff re-dispatch, replica repair and
+        # timeout-based failure detection.  None keeps the classic
+        # bit-exact path (no extra SeedSequence child is even spawned).
+        self.faults = faults
+        if faults is not None:
+            faults.validate()
         self._sampler = _ServiceSampler(self.lm)
         self._qstate: Optional[dict] = None
         self._pstate: Optional[dict] = None
         self._tstate: Optional[dict] = None
         self._tierstate: Optional[dict] = None
+        self._fstate: Optional[dict] = None
 
     def sample_bank(self, pipelines: Sequence[Pipeline]) -> SampleBank:
         """A :class:`SampleBank` for common-random-number runs."""
@@ -482,11 +504,13 @@ class ClusterEngine:
 
     # -- public API ----------------------------------------------------------
     def run(self, pipelines: List[Pipeline], *, arrivals: ArrivalProcess,
-            duration_s: float) -> List[RequestResult]:
+            duration_s: float,
+            timeout_s: Optional[float] = None) -> List[RequestResult]:
         """Simulate ``duration_s`` of offered load and drain every request;
         returns one ``RequestResult`` per arrival, in arrival order."""
         return self.run_soa(pipelines, arrivals=arrivals,
-                            duration_s=duration_s).to_results()
+                            duration_s=duration_s,
+                            timeout_s=timeout_s).to_results()
 
     def run_soa(self, pipelines: Optional[Sequence[Pipeline]] = None, *,
                 arrivals: Optional[ArrivalProcess] = None,
@@ -495,7 +519,8 @@ class ClusterEngine:
                 bank: Optional[SampleBank] = None,
                 controller=None,
                 tenants: Optional[Sequence[TenantSpec]] = None,
-                scheduler=None) -> EngineTrace:
+                scheduler=None,
+                timeout_s: Optional[float] = None) -> EngineTrace:
         """The batched event loop; returns the run as an
         :class:`EngineTrace`.
 
@@ -587,14 +612,32 @@ class ClusterEngine:
             if self.n_dscs < 1:
                 raise ValueError("the tiered data layer needs n_dscs >= 1")
         self._tierstate = None
+        self._fstate = None
+
+        fp = self.faults
+        fa = fp is not None
+        if fa and mt:
+            raise NotImplementedError(
+                "fault injection composes with single-tenant runs only; "
+                "lost-copy accounting under multi-tenant schedulers is "
+                "future work")
+        if timeout_s is not None:
+            if timeout_s <= 0.0:
+                raise ValueError("timeout_s must be positive")
+            if mt:
+                raise NotImplementedError(
+                    "timeout_s deadlines compose with single-tenant "
+                    "runs only")
 
         ss = np.random.SeedSequence(self.seed)
-        # SeedSequence children are keyed by index, so the first two
-        # children are identical whether or not a third (tier) child is
-        # spawned — tier-off runs keep the exact golden-trace streams
-        kids = ss.spawn(3 if tier_on else 2)
+        # SeedSequence children are keyed by index, so earlier children are
+        # identical regardless of how many later ones (tier, faults) are
+        # spawned — fault-free tier-off runs keep the exact golden-trace
+        # streams
+        kids = ss.spawn(4 if fa else (3 if tier_on else 2))
         arr_rng, rng = (np.random.default_rng(s) for s in kids[:2])
         tier_rng = np.random.default_rng(kids[2]) if tier_on else None
+        frng = np.random.default_rng(kids[3]) if fa else None
         src: Optional[np.ndarray] = None
         if mt:
             merged = MergedArrivals(
@@ -679,6 +722,7 @@ class ClusterEngine:
 
         hpush, hpop = heapq.heappush, heapq.heappop
         INF = math.inf
+        NAN = math.nan
         hedge = self.hedge_budget_s
         heap: List[tuple] = []          # (time, (rid << 1) | path), or
                                         # (time, -(drive + 1)) wake events
@@ -820,6 +864,60 @@ class ClusterEngine:
         else:
             ep_t = INF
 
+        # -- fault-injection & deadline state (faults.py; inert without a
+        # plan / timeout).  The expanded timeline is consumed through a
+        # cursor like the arrival stream; retry timers reuse the
+        # -(nd+1+rid) heap code range (mutually exclusive with time-slice
+        # quanta: faults force the single-tenant FCFS path) and repair
+        # completions use the constant code -(nd+1+n).
+        if fa:
+            horizon = (duration_s if duration_s > 0.0
+                       else (float(times[-1]) if n else 0.0))
+            ftl = fp.timeline(nd, nc, horizon, frng)
+            fn = len(ftl)
+            d_alive = [True] * nd
+            c_alive = [True] * nc
+            n_alive_active = nc         # alive AND active CPU nodes
+            d_stall = [1.0] * nd        # live slowdown factor per drive
+            d_run = [-1] * nd           # running request per drive
+            c_run = [-1] * nc           # running request per CPU node
+            att_l = [0] * n             # losses so far per request
+            prevdel_l = [0.0] * n       # previous granted retry delay
+            degr = {}                   # rid -> degraded-path fetch extra
+            d_down_since = [-1.0] * nd
+            d_down_s = [0.0] * nd
+            rp = fp.retry
+            rbud = fp.retry_budget
+            det_s = fp.detect_timeout_s
+            bf_p = fp.backing_fail_p
+            bf_retry = fp.backing_retry_s
+            lm_bf2 = self.lm.backing_fetch
+            f_rb = [p.workload.request_bytes for p in pipelines]
+            rb_granted = 0
+            f_inj = [0] * 6             # timeline events applied, per kind
+            f_cpu_skip = f_back_fail = 0
+            f_lost = f_retry_sched = f_redisp = f_budget_deny = 0
+            f_aband = f_degraded = f_detect = 0
+            repair_on = (fp.repair is not None and tier_on and t_nobj > 0)
+            if repair_on:
+                rep_bw = fp.repair.bandwidth_bps
+                rep_objbytes = (t_objbytes if t_objbytes
+                                else sum(f_rb) / len(f_rb))
+                rep_until = 0.0         # when the serialized pipe frees up
+                rep_pending: deque = deque()
+            rep_bytes = rep_s = 0.0
+            rep_jobs = rep_objs = 0
+        else:
+            fn = 0
+            ftl = ()
+            det_s = None
+        fi = 0
+        dead_l = (bytearray(n) if (fa or timeout_s is not None) else None)
+        t_dead = 0                      # deadline abandonments
+        x_ev = 0                        # fault/retry/repair/deadline events
+        dl_dq: deque = deque()          # (deadline, rid): FIFO, const offset
+        det_dq: deque = deque()         # (detect time, rid): FIFO likewise
+
         # -- dispatch helpers ------------------------------------------------
         if tier_on:
             lm_bf = self.lm.backing_fetch
@@ -868,6 +966,11 @@ class ClusterEngine:
                 svc = c[0] + c[1] * s_tr[i] + c[2] * s_tw[i]
                 if tier_on:
                     svc = tier_adjust(r2, d, svc)
+                if fa:
+                    sf = d_stall[d]
+                    if sf != 1.0:       # gray failure: slowed service
+                        svc *= sf
+                    d_run[d] = r2
                 d_busy_s += svc
                 d_start_a[r2] = t; d_svc_a[r2] = svc
                 d_busy[d] = 1
@@ -898,6 +1001,11 @@ class ClusterEngine:
                 s_i = i + 1
                 c = coef_c[picks_l[r2]]
                 svc = c[0] + c[1] * s_tr[i] + c[2] * s_tw[i]
+                if fa:
+                    ext = degr.get(r2)
+                    if ext is not None: # degraded: remote backing fetch
+                        svc += ext
+                    c_run[node] = r2
                 c_busy_s += svc
                 c_start_a[r2] = t; c_svc_a[r2] = svc
                 c_busy[node] = 1
@@ -917,9 +1025,10 @@ class ClusterEngine:
             # while n_c_active >= 1, which the epoch handler guarantees)
             while True:
                 load, node = loadheap[0]
-                if c_load[node] == load and c_active[node]:
+                if c_load[node] == load and c_active[node] \
+                        and (not fa or c_alive[node]):
                     break
-                hpop(loadheap)          # stale or deactivated entry
+                hpop(loadheap)          # stale, deactivated or dead entry
             c_node_l[rid] = node
             load += 1; c_load[node] = load
             hpush(loadheap, (load, node))
@@ -946,12 +1055,136 @@ class ClusterEngine:
                 s_i = i + 1
                 c = coef_c[picks_l[rid]]
                 svc = c[0] + c[1] * s_tr[i] + c[2] * s_tw[i]
+                if fa:
+                    ext = degr.get(rid)
+                    if ext is not None:
+                        svc += ext
+                    c_run[node] = rid
                 c_busy_s += svc
                 c_start_a[rid] = t; c_svc_a[rid] = svc
                 c_busy[node] = 1
                 if mt:
                     tb_c[ten_l[rid]] += svc
                 hpush(heap, (t + svc, (rid << 1) | 1))
+
+        if fa:
+            def degrade(rid2: int, t: float) -> None:
+                """Every replica of the request's object is down (or its
+                home drive is dead, tier off): serve on the CPU path with
+                the object fetched from the remote backing store, each
+                fetch attempt failing independently with ``backing_fail_p``
+                (failed attempts cost ``backing_retry_s`` apiece)."""
+                nonlocal f_degraded, f_back_fail
+                f_degraded += 1
+                sz = (t_objbytes or rb[picks_l[rid2]]) if tier_on \
+                    else f_rb[picks_l[rid2]]
+                ext = lm_bf2(sz)
+                if bf_p > 0.0:
+                    while frng.random() < bf_p:
+                        f_back_fail += 1
+                        ext += bf_retry
+                degr[rid2] = ext
+                issue_cpu(rid2, t)
+
+            def try_retry(rid2: int, t: float) -> None:
+                """One copy of ``rid2`` was just lost and no other copy is
+                live: grant a retry (backoff delay on the heap) under the
+                policy + budget, or abandon the request."""
+                nonlocal f_retry_sched, f_aband, f_budget_deny, \
+                    rb_granted, end_t
+                att = att_l[rid2] + 1
+                att_l[rid2] = att
+                delay = None
+                if rbud is None or rbud.allows(rb_granted, ai):
+                    delay = rp.delay_s(att, prevdel_l[rid2], frng)
+                else:
+                    f_budget_deny += 1
+                if delay is None:
+                    dead_l[rid2] = 1
+                    f_aband += 1
+                    if t > end_t:
+                        end_t = t
+                    return
+                prevdel_l[rid2] = delay
+                rb_granted += 1
+                f_retry_sched += 1
+                hpush(heap, (t + delay, -(nd + 1 + rid2)))
+
+            def redispatch(rid2: int, t: float) -> None:
+                """A granted retry timer fired: re-dispatch the request to
+                a surviving drive (alive replicas under tiering, the home
+                drive otherwise), to a surviving CPU node for
+                non-acceleratable requests, or degrade when no drive
+                holding the object survives."""
+                nonlocal f_redisp, n_d_on, n_waking, t_wake
+                if not accel_l[rid2]:
+                    f_redisp += 1
+                    issue_cpu(rid2, t)
+                    return
+                d = -1
+                if tier_on:
+                    o = obj_l[rid2] if obj_l is not None else rid2
+                    reps = replicas[o]
+                    best = None
+                    for d2 in reps:
+                        if not d_alive[d2]:
+                            continue
+                        key2 = (1 if (dyn and not d_power[d2]) else 0,
+                                d_qd[d2] + d_busy[d2],
+                                0 if (caches is not None
+                                      and caches[d2].warm(o)) else 1,
+                                d2)
+                        if best is None or key2 < best:
+                            best = key2; d = d2
+                else:
+                    d0 = drive_l[rid2]
+                    if d_alive[d0]:
+                        d = d0
+                if d < 0:
+                    degrade(rid2, t)
+                    return
+                f_redisp += 1
+                drive_l[rid2] = d
+                ds_l[rid2] = _QUEUED
+                if dyn and d_power[d] == 0:
+                    d_power[d] = 2
+                    n_d_on += 1
+                    n_waking += 1
+                    d_on_since[d] = t
+                    d_busy[d] = 1
+                    hpush(heap, (t + wake_s, -(d + 1)))
+                    t_wake += 1
+                d_area[d] += d_qd[d] * (t - d_last[d]); d_last[d] = t
+                d_queues[d].append(rid2)
+                q = d_qd[d] + 1; d_qd[d] = q
+                if q > d_maxd[d]: d_maxd[d] = q
+                if not d_busy[d]:
+                    start_drive(d, t)
+
+            def schedule_repair(dd: int, t: float) -> None:
+                """Drive ``dd`` just left the fleet (fail-stop or
+                autoscaler power-down): queue the re-replication of every
+                object that kept a replica there onto surviving drives
+                (HRW order), through the serialized repair pipe.  The
+                replica table is patched when the transfer completes."""
+                nonlocal rep_until
+                if not repair_on:
+                    return
+                moves = []
+                for o2, r2 in enumerate(replicas):
+                    if dd in r2:
+                        for cand in _hrw_ranking(f"obj-{o2}", nd):
+                            if cand != dd and d_alive[cand] \
+                                    and cand not in r2:
+                                moves.append((o2, dd, cand))
+                                break
+                if not moves:
+                    return
+                nbytes = len(moves) * rep_objbytes
+                start = rep_until if rep_until > t else t
+                rep_until = start + nbytes / rep_bw
+                rep_pending.append((nbytes, moves))
+                hpush(heap, (rep_until, -(nd + 1 + n)))
 
         if sk == 1:
             def ts_select(d: int, t: float) -> None:
@@ -1083,7 +1316,11 @@ class ClusterEngine:
         while True:
             ft = heap[0][0] if heap else INF
             ht = hedge_dq[0][0] if hedge_dq else INF
+            fault_t = ftl[fi][0] if fi < fn else INF
+            dlt = dl_dq[0][0] if dl_dq else INF
+            dtt = det_dq[0][0] if det_dq else INF
             if ep_t <= ft and ep_t <= ht and ep_t <= mig_t and \
+                    ep_t <= fault_t and ep_t <= dlt and ep_t <= dtt and \
                     ep_t < next_t and (next_t != INF or heap or hedge_dq):
                 # epoch boundary: snapshot telemetry, apply the controller's
                 # action.  Fires before same-time dynamic events, after
@@ -1122,7 +1359,10 @@ class ClusterEngine:
                             if not c_active[node]:
                                 c_active[node] = True
                                 n_c_active += 1
-                                if c_on_since[node] < 0.0:
+                                if fa and c_alive[node]:
+                                    n_alive_active += 1
+                                if c_on_since[node] < 0.0 and \
+                                        (not fa or c_alive[node]):
                                     c_on_since[node] = t
                                 hpush(loadheap, (c_load[node], node))
                     elif want_c < n_c_active:
@@ -1130,9 +1370,15 @@ class ClusterEngine:
                             if n_c_active <= want_c:
                                 break
                             if c_active[node]:
+                                if fa and c_alive[node] \
+                                        and n_alive_active <= 1:
+                                    continue    # keep one live CPU node
                                 c_active[node] = False
                                 n_c_active -= 1
-                                if not c_busy[node] and not c_queues[node]:
+                                if fa and c_alive[node]:
+                                    n_alive_active -= 1
+                                if not c_busy[node] and not c_queues[node] \
+                                        and c_on_since[node] >= 0.0:
                                     c_on_ivals.append((c_on_since[node], t))
                                     c_on_since[node] = -1.0
                     # drives: power on lowest-index off drives (they wake,
@@ -1144,6 +1390,8 @@ class ClusterEngine:
                         for d in range(nd):
                             if n_d_on >= want_d:
                                 break
+                            if fa and not d_alive[d]:
+                                continue    # dead drives cannot be woken
                             if d_power[d] == 0:
                                 d_power[d] = 2
                                 n_d_on += 1
@@ -1162,9 +1410,17 @@ class ClusterEngine:
                                 n_d_on -= 1
                                 d_on_ivals.append((d_on_since[d], t))
                                 d_on_since[d] = -1.0
+                                if fa:
+                                    # an autoscaler power-down removes the
+                                    # drive's replicas from service just
+                                    # like a fail-stop: re-replicate them
+                                    # (ROADMAP "replication under the
+                                    # autoscaler" follow-on)
+                                    schedule_repair(d, t)
                 ep_t += ep_s
                 continue
             if mig_t <= ft and mig_t <= ht and mig_t < ep_t and \
+                    mig_t <= fault_t and mig_t <= dlt and mig_t <= dtt and \
                     mig_t < next_t and (next_t != INF or heap or hedge_dq):
                 # hot-key migration epoch: rebalance the replica table from
                 # the live per-drive backlogs and this epoch's access
@@ -1179,6 +1435,223 @@ class ClusterEngine:
                     a2.clear()
                 mig_t += mig_s
                 continue
+            if fault_t <= ft and fault_t <= ht and fault_t < ep_t and \
+                    fault_t < mig_t and fault_t <= dlt and fault_t <= dtt \
+                    and fault_t < next_t:
+                # injected fault from the plan's timeline (self-
+                # terminating: the cursor only ever advances)
+                t, kind, srv, extra = ftl[fi]
+                fi += 1
+                x_ev += 1
+                if kind == DRIVE_FAIL:
+                    d = srv
+                    if not d_alive[d]:
+                        continue        # overlapping window: already dead
+                    d_alive[d] = False
+                    f_inj[DRIVE_FAIL] += 1
+                    d_down_since[d] = t
+                    lost = []
+                    dq = d_queues[d]
+                    if dq or d_qd[d]:
+                        d_area[d] += d_qd[d] * (t - d_last[d])
+                        d_last[d] = t
+                        while dq:
+                            r2 = dq.popleft()
+                            if ds_l[r2] == _CANCELLED:
+                                t_tomb += 1
+                                continue
+                            ds_l[r2] = _CANCELLED
+                            lost.append(r2)
+                        d_qd[d] = 0
+                    r3 = d_run[d]
+                    if r3 >= 0:
+                        left = d_start_a[r3] + d_svc_a[r3] - t
+                        d_busy_s -= left
+                        if ds_l[r3] != _CANCELLED:  # not a draining loser
+                            lost.append(r3)
+                        else:
+                            rec_d += left
+                        ds_l[r3] = _PREEMPTED
+                        # invalidate the recorded service so the dead
+                        # copy's in-heap finish event can never match a
+                        # later re-dispatch that is still queued (NaN
+                        # fails the exact-time staleness check)
+                        d_svc_a[r3] = NAN
+                        d_run[d] = -1
+                    d_busy[d] = 0
+                    if dyn:
+                        if d_power[d] == 2:
+                            n_waking -= 1   # stale wake event skipped later
+                        if d_power[d] != 0:
+                            n_d_on -= 1
+                            d_on_ivals.append((d_on_since[d], t))
+                            d_on_since[d] = -1.0
+                    d_power[d] = 0
+                    schedule_repair(d, t)
+                    for r2 in lost:
+                        if winner_l[r2] >= 0 or dead_l[r2]:
+                            continue
+                        f_lost += 1
+                        cst = cs_l[r2]
+                        if cst == _QUEUED or cst == _RUNNING:
+                            continue    # the hedge copy races on
+                        try_retry(r2, t)
+                elif kind == DRIVE_RECOVER:
+                    d = srv
+                    if d_alive[d]:
+                        continue
+                    d_alive[d] = True
+                    f_inj[DRIVE_RECOVER] += 1
+                    d_down_s[d] += t - d_down_since[d]
+                    d_down_since[d] = -1.0
+                    if tier_on:
+                        # the replacement drive comes back empty: durable
+                        # copies refill lazily from the backing store
+                        mat[d].clear()
+                    d_power[d] = 1
+                    d_busy[d] = 0
+                    if dyn:
+                        n_d_on += 1
+                        d_on_since[d] = t
+                elif kind == STALL_BEGIN:
+                    if d_alive[srv]:
+                        f_inj[STALL_BEGIN] += 1
+                    d_stall[srv] = extra
+                elif kind == STALL_END:
+                    d_stall[srv] = 1.0
+                elif kind == CPU_CRASH:
+                    node = srv
+                    if not c_alive[node]:
+                        continue
+                    if c_active[node] and n_alive_active <= 1:
+                        f_cpu_skip += 1  # never kill the last live node
+                        continue
+                    c_alive[node] = False
+                    f_inj[CPU_CRASH] += 1
+                    if c_active[node]:
+                        n_alive_active -= 1
+                    lost = []
+                    cq = c_queues[node]
+                    if cq or c_qd[node]:
+                        c_area[node] += c_qd[node] * (t - c_last[node])
+                        c_last[node] = t
+                        while cq:
+                            r2 = cq.popleft()
+                            if cs_l[r2] == _CANCELLED:
+                                t_tomb += 1
+                                continue
+                            cs_l[r2] = _CANCELLED
+                            lost.append(r2)
+                        c_qd[node] = 0
+                    r3 = c_run[node]
+                    if r3 >= 0:
+                        left = c_start_a[r3] + c_svc_a[r3] - t
+                        c_busy_s -= left
+                        if cs_l[r3] != _CANCELLED:
+                            lost.append(r3)
+                        else:
+                            rec_c += left
+                        cs_l[r3] = _PREEMPTED
+                        c_svc_a[r3] = NAN   # kill the stale finish event
+                        c_run[node] = -1
+                    c_busy[node] = 0
+                    c_load[node] = 0
+                    if dyn and c_on_since[node] >= 0.0:
+                        c_on_ivals.append((c_on_since[node], t))
+                        c_on_since[node] = -1.0
+                    for r2 in lost:
+                        if winner_l[r2] >= 0 or dead_l[r2]:
+                            continue
+                        f_lost += 1
+                        dst = ds_l[r2]
+                        if dst == _QUEUED or dst == _RUNNING:
+                            continue    # the DSCS copy races on
+                        try_retry(r2, t)
+                else:                   # CPU_RECOVER
+                    node = srv
+                    if c_alive[node]:
+                        continue
+                    c_alive[node] = True
+                    f_inj[CPU_RECOVER] += 1
+                    if c_active[node]:
+                        n_alive_active += 1
+                        hpush(loadheap, (c_load[node], node))
+                        if dyn and c_on_since[node] < 0.0:
+                            c_on_since[node] = t
+                continue
+            if dlt <= ft and dlt <= ht and dlt < ep_t and dlt < mig_t \
+                    and dlt <= dtt and dlt < next_t:
+                # per-request deadline: cancel whatever is still pending
+                # (queued copies tombstone; running copies free their
+                # server and return the unserved remainder)
+                t, rid = dl_dq.popleft()
+                x_ev += 1
+                if winner_l[rid] >= 0 or dead_l[rid]:
+                    continue
+                dst = ds_l[rid]
+                if dst == _QUEUED:
+                    d = drive_l[rid]
+                    d_area[d] += d_qd[d] * (t - d_last[d]); d_last[d] = t
+                    d_qd[d] -= 1
+                    ds_l[rid] = _CANCELLED
+                elif dst == _RUNNING:
+                    ds_l[rid] = _PREEMPTED
+                    d = drive_l[rid]
+                    left = d_start_a[rid] + d_svc_a[rid] - t
+                    rec_d += left
+                    d_busy_s -= left
+                    d_busy[d] = 0
+                    if fa:
+                        d_run[d] = -1
+                    if d_queues[d]:
+                        start_drive(d, t)
+                cst = cs_l[rid]
+                if cst == _QUEUED:
+                    node = c_node_l[rid]
+                    c_area[node] += c_qd[node] * (t - c_last[node])
+                    c_last[node] = t
+                    c_qd[node] -= 1
+                    load = c_load[node] - 1; c_load[node] = load
+                    hpush(loadheap, (load, node))
+                    cs_l[rid] = _CANCELLED
+                elif cst == _RUNNING:
+                    cs_l[rid] = _PREEMPTED
+                    node = c_node_l[rid]
+                    left = c_start_a[rid] + c_svc_a[rid] - t
+                    rec_c += left
+                    c_busy_s -= left
+                    c_busy[node] = 0
+                    if fa:
+                        c_run[node] = -1
+                    load = c_load[node] - 1; c_load[node] = load
+                    hpush(loadheap, (load, node))
+                    if c_queues[node]:
+                        start_cpu(node, t)
+                    if dyn and not c_active[node] and not c_busy[node] \
+                            and not c_queues[node] \
+                            and c_on_since[node] >= 0.0:
+                        c_on_ivals.append((c_on_since[node], t))
+                        c_on_since[node] = -1.0
+                dead_l[rid] = 1
+                t_dead += 1
+                if t > end_t:
+                    end_t = t
+                continue
+            if dtt <= ft and dtt <= ht and dtt < ep_t and dtt < mig_t \
+                    and dtt < next_t:
+                # timeout-based failure detection: the DSCS copy is still
+                # unfinished detect_timeout_s after dispatch (stalled or
+                # backlogged drive) — hedge it on the CPU path now
+                t, rid = det_dq.popleft()
+                x_ev += 1
+                if winner_l[rid] < 0 and not dead_l[rid] \
+                        and cs_l[rid] == _FREE \
+                        and (ds_l[rid] == _QUEUED
+                             or ds_l[rid] == _RUNNING):
+                    hedged_l[rid] = True
+                    f_detect += 1
+                    issue_cpu(rid, t)
+                continue
             if ht <= ft:
                 if ht < next_t:         # hedge timer fires
                     t, rid = hedge_dq.popleft()
@@ -1186,7 +1659,10 @@ class ClusterEngine:
                     # serviced — a preempted copy re-queues as _QUEUED but
                     # holds partial progress, so it is no straggler)
                     if ds_l[rid] == _QUEUED and (sk != 1
-                                                 or rem_l[rid] < 0.0):
+                                                 or rem_l[rid] < 0.0) \
+                            and (not fa or cs_l[rid] == _FREE):
+                        # under faults a detection hedge may already have
+                        # issued the CPU copy; never issue a third
                         hedged_l[rid] = True
                         t_hedge += 1
                         issue_cpu(rid, t)
@@ -1197,6 +1673,8 @@ class ClusterEngine:
                     k2 = -code - 1
                     if k2 < nd:         # wake event: drive is serviceable
                         d = k2
+                        if fa and d_power[d] != 2:
+                            continue    # drive failed while waking
                         assert d_power[d] == 2, \
                             "wake event for a non-waking drive"
                         d_power[d] = 1
@@ -1204,6 +1682,33 @@ class ClusterEngine:
                         n_waking -= 1
                         if d_queues[d]:
                             start_drive(d, t)
+                        continue
+                    if fa:
+                        # the -(nd+1+...) code range holds retry timers
+                        # (rid < n) and repair completions (rid == n) on
+                        # faulted runs — time-slicing is mutually
+                        # exclusive with fault injection
+                        rid = k2 - nd
+                        x_ev += 1
+                        if rid >= n:    # repair transfer completed
+                            nbytes, moves = rep_pending.popleft()
+                            for o2, frm, tgt in moves:
+                                r2 = replicas[o2]
+                                if frm in r2 and d_alive[tgt]:
+                                    r2[r2.index(frm)] = tgt
+                                    mat[tgt].add(o2)
+                                    rep_objs += 1
+                            rep_bytes += nbytes
+                            rep_s += nbytes / rep_bw
+                            rep_jobs += 1
+                            continue
+                        if winner_l[rid] >= 0 or dead_l[rid] \
+                                or ds_l[rid] == _QUEUED \
+                                or ds_l[rid] == _RUNNING \
+                                or cs_l[rid] == _QUEUED \
+                                or cs_l[rid] == _RUNNING:
+                            continue    # resolved, or a copy is racing
+                        redispatch(rid, t)
                         continue
                     # time-slice quantum expiry: preempt the running copy
                     rid = k2 - nd
@@ -1235,9 +1740,16 @@ class ClusterEngine:
                 if code & 1:            # CPU copy finished
                     if cs_l[rid] == _PREEMPTED:
                         continue        # stale: node freed at cancellation
+                    if fa and t != c_start_a[rid] + c_svc_a[rid]:
+                        # stale event of a copy lost to a fault and since
+                        # re-issued: the live copy's own event carries the
+                        # recomputed (bit-identical) start + service time
+                        continue
                     end_t = t
                     node = c_node_l[rid]
                     c_busy[node] = 0
+                    if fa:
+                        c_run[node] = -1
                     load = c_load[node] - 1; c_load[node] = load
                     hpush(loadheap, (load, node))
                     if cs_l[rid] == _CANCELLED:
@@ -1282,6 +1794,8 @@ class ClusterEngine:
                                     tb_d[ten_l[rid]] -= left
                                 if sk == 0:
                                     d_busy[d] = 0
+                                    if fa:
+                                        d_run[d] = -1
                                     if d_queues[d]:
                                         start_drive(d, t)
                                 else:
@@ -1303,6 +1817,8 @@ class ClusterEngine:
                 else:                   # DSCS copy finished
                     if ds_l[rid] == _PREEMPTED:
                         continue        # stale: drive freed at cancellation
+                    if fa and t != d_start_a[rid] + d_svc_a[rid]:
+                        continue        # stale event of a re-dispatched copy
                     end_t = t
                     d = drive_l[rid]
                     if ds_l[rid] == _CANCELLED:
@@ -1343,6 +1859,8 @@ class ClusterEngine:
                                     if mt:
                                         tb_c[ten_l[rid]] -= left
                                     c_busy[node] = 0
+                                    if fa:
+                                        c_run[node] = -1
                                     load = c_load[node] - 1
                                     c_load[node] = load
                                     hpush(loadheap, (load, node))
@@ -1360,6 +1878,8 @@ class ClusterEngine:
                     # free the DSA and continue its queue, per scheduler
                     if sk == 0:
                         d_busy[d] = 0
+                        if fa:
+                            d_run[d] = -1
                         if d_queues[d]:
                             start_drive(d, t)
                     elif sk == 1:
@@ -1379,6 +1899,8 @@ class ClusterEngine:
             rid = ai
             if mt:
                 tarr[ten_l[rid]] += 1
+            if timeout_s is not None:
+                dl_dq.append((t + timeout_s, rid))
             if accel_l[rid]:
                 if tier_on:
                     # replica routing: among the object's replica drives
@@ -1399,9 +1921,11 @@ class ClusterEngine:
                             replicas[o] = reps
                             mat[reps[0]].add(o)
                     d = reps[0]
-                    if len(reps) > 1:
+                    if len(reps) > 1 or fa:
                         best = None
                         for d2 in reps:
+                            if fa and not d_alive[d2]:
+                                continue    # route around dead drives
                             key2 = (1 if (dyn and not d_power[d2]) else 0,
                                     d_qd[d2] + d_busy[d2],
                                     0 if (caches is not None
@@ -1409,15 +1933,37 @@ class ClusterEngine:
                                     d2)
                             if best is None or key2 < best:
                                 best = key2; d = d2
+                        if fa and best is None:
+                            d = -1          # every replica is down
                     drive_l[rid] = d
-                    if mig is not None:
+                    if mig is not None and d >= 0:
                         a2 = acc[d]
                         a2[o] = a2.get(o, 0) + 1
                 else:
                     d = drive_l[rid]
+                    if fa and not d_alive[d]:
+                        d = -1
+                if fa and d < 0:
+                    # no surviving drive holds the object: gracefully
+                    # degrade to the CPU path + remote backing fetch
+                    drive_l[rid] = -1
+                    t_cdisp += 1
+                    degrade(rid, t)
+                    ai += 1
+                    if ai < n:
+                        if ai == limit:
+                            base = ai
+                            limit = min(n, ai + _CHUNK)
+                            times_l = times[ai:limit].tolist()
+                        next_t = times_l[ai - base]
+                    else:
+                        next_t = INF
+                    continue
                 t_ddisp += 1
                 if hedge is not None:
                     hedge_dq.append((t + hedge, rid))
+                if det_s is not None:
+                    det_dq.append((t + det_s, rid))
                 if sk == 1:
                     # time-slicing: enqueue on the owning tenant's
                     # per-drive queue; kick the scheduler if the DSA idles
@@ -1481,6 +2027,11 @@ class ClusterEngine:
                         svc = c[0] + c[1] * s_tr[i] + c[2] * s_tw[i]
                         if tier_on:
                             svc = tier_adjust(rid, d, svc)
+                        if fa:
+                            sf = d_stall[d]
+                            if sf != 1.0:
+                                svc *= sf
+                            d_run[d] = rid
                         d_busy_s += svc
                         d_start_a[rid] = t; d_svc_a[rid] = svc
                         d_busy[d] = 1
@@ -1503,7 +2054,8 @@ class ClusterEngine:
         # copy (= one sampler draw) reaches a terminal event, so the count
         # is exact (quantum expiries counted separately)
         events = (n + (s_i - sampler._i)
-                  + (t_ddisp if hedge is not None else 0) + t_wake + t_pre)
+                  + (t_ddisp if hedge is not None else 0) + t_wake + t_pre
+                  + x_ev)
         sampler._i = s_i                # keep the sampler cursor consistent
 
         # -- power accounting (busy/powered seconds per class) ---------------
@@ -1528,6 +2080,62 @@ class ClusterEngine:
             "dscs": {"busy_s": d_busy_s, "powered_s": d_on_s, "n": nd},
             "cpu": {"busy_s": c_busy_s, "powered_s": c_on_s, "n": nc},
             "wake_events": t_wake, "epochs": ep_idx}
+
+        # -- fault & deadline telemetry --------------------------------------
+        if fa or timeout_s is not None:
+            completed = t_srv_d + t_srv_c + t_won_d + t_won_c
+            if fa:
+                for d in range(nd):
+                    if d_down_since[d] >= 0.0:  # still down at the horizon
+                        down = end_t - d_down_since[d]
+                        if down > 0.0:
+                            d_down_s[d] += down
+                self._fstate = {
+                    "enabled": True,
+                    "injected": {
+                        "drive_fail": f_inj[DRIVE_FAIL],
+                        "drive_recover": f_inj[DRIVE_RECOVER],
+                        "stall": f_inj[STALL_BEGIN],
+                        "cpu_crash": f_inj[CPU_CRASH],
+                        "cpu_recover": f_inj[CPU_RECOVER],
+                        "cpu_crash_skipped": f_cpu_skip,
+                        "backing_fetch_failures": f_back_fail,
+                    },
+                    "lost": f_lost,
+                    "retries": {"scheduled": f_retry_sched,
+                                "redispatched": f_redisp,
+                                "budget_denied": f_budget_deny},
+                    "abandoned": f_aband,
+                    "deadline_abandoned": t_dead,
+                    "degraded": f_degraded,
+                    "detect_hedges": f_detect,
+                    "unavailability": {"per_drive_s": list(d_down_s),
+                                       "total_s": sum(d_down_s)},
+                    "repair": {"bytes": rep_bytes, "seconds": rep_s,
+                               "jobs": rep_jobs, "objects": rep_objs},
+                    "goodput": {"offered": n, "completed": completed,
+                                "goodput_frac": (completed / n
+                                                 if n else 0.0)},
+                }
+                for nm2, v2 in (("fault_lost", f_lost),
+                                ("fault_retries", f_retry_sched),
+                                ("fault_abandoned", f_aband),
+                                ("fault_degraded", f_degraded),
+                                ("fault_detect_hedges", f_detect),
+                                ("repair_bytes", rep_bytes),
+                                ("repair_s", rep_s)):
+                    if v2:
+                        self.telemetry.inc(nm2, v2)
+            else:
+                self._fstate = {
+                    "enabled": False,
+                    "deadline_abandoned": t_dead,
+                    "goodput": {"offered": n, "completed": completed,
+                                "goodput_frac": (completed / n
+                                                 if n else 0.0)},
+                }
+            if t_dead:
+                self.telemetry.inc("deadline_abandoned", t_dead)
 
         # -- per-tenant telemetry (finalized to the common horizon) ----------
         if mt:
@@ -1684,6 +2292,28 @@ class ClusterEngine:
         ``(t, obj, from, to)`` move ``log``).
         """
         return self._tierstate
+
+    def fault_stats(self) -> Optional[Dict[str, object]]:
+        """Fault-injection & recovery telemetry from the last run
+        (``None`` when neither a :class:`~repro.core.faults.FaultPlan`
+        nor a ``timeout_s`` deadline was configured).
+
+        With a plan: ``injected`` (timeline events applied per kind, plus
+        ``cpu_crash_skipped`` last-live-node vetoes and
+        ``backing_fetch_failures``), ``lost`` (copies killed with no
+        sibling copy racing), ``retries``
+        (``scheduled``/``redispatched``/``budget_denied``), ``abandoned``
+        (retry-path give-ups), ``deadline_abandoned``, ``degraded``
+        (requests served CPU + backing fetch because no live drive held
+        their object), ``detect_hedges`` (watchdog-issued CPU copies),
+        ``unavailability`` (``per_drive_s`` down-seconds clipped to the
+        horizon and their ``total_s``), ``repair``
+        (``bytes``/``seconds``/``jobs``/``objects`` re-replicated), and
+        ``goodput`` (``offered``/``completed``/``goodput_frac``).  With
+        only ``timeout_s``, the dict carries ``deadline_abandoned`` and
+        ``goodput``.
+        """
+        return self._fstate
 
     def tenant_stats(self) -> Optional[Dict[str, object]]:
         """Per-tenant telemetry from the last multi-tenant run (``None``

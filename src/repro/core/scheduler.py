@@ -27,6 +27,12 @@ the engine's event loop:
     weighted time-slicing, spatial DSA-lane partitioning) and returns
     per-tenant :class:`~repro.core.tenancy.TenantReport` scorecards
     (fig21 fairness study); the tenancy API is re-exported here
+  * fault injection: ``ClusterSim(faults=FaultPlan(...))`` attaches the
+    seeded failure/recovery layer from :mod:`repro.core.faults` — drive
+    fail-stop and gray-failure stalls, CPU node crashes, retry with
+    backoff under a budget, replica repair, timeout-based failure
+    detection — scored by ``fault_stats()`` and studied in fig23; the
+    fault API is re-exported here
 
 Every run is reproducible from the constructor seed: repeated ``run``
 calls on one ``ClusterSim`` (and two sims built with equal seeds) produce
@@ -46,6 +52,10 @@ from repro.core.autoscale import (AutoscaleAction,  # noqa: F401
                                   WorstTenantPolicy, evaluate_policy)
 from repro.core.engine import (ClusterEngine, EngineTrace,  # noqa: F401
                                FleetSnapshot, RequestResult, Telemetry)
+from repro.core.faults import (CpuCrash, DriveFailure,  # noqa: F401
+                               DriveStall, ExponentialBackoff, FaultPlan,
+                               FixedRetry, NoRetry, RepairModel,
+                               RetryBudget, RetryPolicy)
 from repro.core.function import Pipeline
 from repro.core.latency import LatencyModel
 from repro.core.placement import StoragePool
@@ -57,12 +67,14 @@ from repro.core.tiering import (DriveCache, MigrationPolicy,  # noqa: F401
                                 TierConfig)
 
 __all__ = ["AutoscaleAction", "AutoscalePolicy", "AutoscaleReport",
-           "ClusterSim", "DriveCache", "DriveScheduler", "EWMAPolicy",
-           "FCFSRunToCompletion", "FleetSnapshot", "MigrationPolicy",
-           "ReactivePolicy", "RequestResult", "SpatialPartition",
-           "StaticPolicy", "Telemetry", "TenantReport", "TenantSpec",
-           "TierConfig", "WeightedTimeSlice", "WorstTenantPolicy",
-           "jain_index", "tenant_reports"]
+           "ClusterSim", "CpuCrash", "DriveCache", "DriveFailure",
+           "DriveScheduler", "DriveStall", "EWMAPolicy",
+           "ExponentialBackoff", "FCFSRunToCompletion", "FaultPlan",
+           "FixedRetry", "FleetSnapshot", "MigrationPolicy", "NoRetry",
+           "ReactivePolicy", "RepairModel", "RequestResult", "RetryBudget",
+           "RetryPolicy", "SpatialPartition", "StaticPolicy", "Telemetry",
+           "TenantReport", "TenantSpec", "TierConfig", "WeightedTimeSlice",
+           "WorstTenantPolicy", "jain_index", "tenant_reports"]
 
 
 class ClusterSim:
@@ -73,7 +85,8 @@ class ClusterSim:
     def __init__(self, *, n_dscs: int = 100, n_cpu: int = 100,
                  latency_model: Optional[LatencyModel] = None,
                  hedge_budget_s: Optional[float] = None, seed: int = 0,
-                 tier: Optional[TierConfig] = None):
+                 tier: Optional[TierConfig] = None,
+                 faults: Optional[FaultPlan] = None):
         self.lm = latency_model or LatencyModel(seed=seed)
         self.pool = StoragePool(n_plain=64, n_dscs=n_dscs)
         self.n_dscs = n_dscs
@@ -81,19 +94,23 @@ class ClusterSim:
         self.hedge_budget_s = hedge_budget_s
         self.seed = seed
         self.tier = tier
+        self.faults = faults
         self.telemetry = Telemetry()
         self.engine = ClusterEngine(
             n_dscs=n_dscs, n_cpu=n_cpu, latency_model=self.lm,
             hedge_budget_s=hedge_budget_s, seed=seed,
-            telemetry=self.telemetry, tier=tier)
+            telemetry=self.telemetry, tier=tier, faults=faults)
 
     def run(self, pipelines: List[Pipeline], *, rps: Optional[float] = None,
             duration_s: float = 120.0,
-            arrivals: Optional[ArrivalProcess] = None) -> List[RequestResult]:
+            arrivals: Optional[ArrivalProcess] = None,
+            timeout_s: Optional[float] = None) -> List[RequestResult]:
         """Simulate ``duration_s`` of offered load.
 
         Pass either ``rps`` (Poisson arrivals at that rate — the historical
-        interface) or an explicit ``arrivals`` process.
+        interface) or an explicit ``arrivals`` process.  ``timeout_s``
+        enforces a per-request deadline: a request still unfinished that
+        long after arrival is abandoned (``finish`` NaN, ``winner`` "").
         """
         if arrivals is None:
             if rps is None:
@@ -103,11 +120,18 @@ class ClusterSim:
             raise ValueError("pass either rps= or arrivals=, not both "
                              "(rps would be silently ignored)")
         return self.engine.run(pipelines, arrivals=arrivals,
-                               duration_s=duration_s)
+                               duration_s=duration_s, timeout_s=timeout_s)
 
     def queue_stats(self):
         """Queue-depth telemetry from the most recent ``run``."""
         return self.engine.queue_stats()
+
+    def fault_stats(self):
+        """Fault-injection & recovery telemetry from the most recent run
+        (``None`` when the sim was built without a
+        :class:`~repro.core.faults.FaultPlan` and the run set no
+        ``timeout_s``)."""
+        return self.engine.fault_stats()
 
     def tier_stats(self):
         """Tiered data-layer telemetry from the most recent run (``None``

@@ -1,0 +1,286 @@
+"""Fault injection & failure recovery (ISSUE 7): drive/node failures,
+retry-with-backoff, replica repair, deadline abandonment, and the fig23
+availability gate.
+
+PYTHONPATH=src python -m pytest -q tests/test_faults.py
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.arrivals import PoissonProcess, make_arrivals
+from repro.core.autoscale import ReactivePolicy, StaticPolicy, evaluate_policy
+from repro.core.faults import (CpuCrash, DriveFailure, DriveStall,
+                               ExponentialBackoff, FaultPlan, FixedRetry,
+                               NoRetry, RepairModel, RetryBudget)
+from repro.core.function import standard_pipeline
+from repro.core.scheduler import ClusterSim
+from repro.core.tiering import TierConfig
+
+PIPES = [standard_pipeline(n) for n in ("asset_damage", "content_moderation")]
+
+
+def _trace(sim, *, rate=80.0, dur=8.0, timeout_s=None, seed_pipes=PIPES):
+    return sim.engine.run_soa(seed_pipes, arrivals=PoissonProcess(rate=rate),
+                              duration_s=dur, timeout_s=timeout_s)
+
+
+# ---------------------------------------------------------------------------
+# plan construction & validation
+# ---------------------------------------------------------------------------
+
+def test_plan_validation():
+    with pytest.raises(ValueError):
+        FaultPlan(drive_mtbf_s=-1.0).validate()
+    with pytest.raises(ValueError):
+        FaultPlan(backing_fail_p=1.5).validate()
+    with pytest.raises(ValueError):
+        FaultPlan(events=(DriveFailure(time=-1.0, drive=0),)).validate()
+    with pytest.raises(ValueError):
+        RepairModel(bandwidth_bps=0.0).validate()
+    FaultPlan(repair=RepairModel()).validate()      # repair-only plan is fine
+
+
+def test_timeline_sorted_and_bounded():
+    fp = FaultPlan(drive_mtbf_s=2.0, drive_mttr_s=1.0, stall_mtbf_s=3.0,
+                   cpu_mtbf_s=4.0, cpu_mttr_s=2.0)
+    rng = np.random.default_rng(0)
+    tl = fp.timeline(4, 4, 20.0, rng)
+    times = [e[0] for e in tl]
+    assert times == sorted(times)
+    assert all(t >= 0.0 for t in times)
+    # begin events all fall inside the horizon (recoveries may overhang)
+    from repro.core.faults import CPU_CRASH, DRIVE_FAIL, STALL_BEGIN
+    assert all(t < 20.0 for t, k, _, _ in tl
+               if k in (DRIVE_FAIL, STALL_BEGIN, CPU_CRASH))
+
+
+def test_timeline_out_of_range_event_raises():
+    fp = FaultPlan(events=(DriveFailure(time=1.0, drive=9),))
+    with pytest.raises(ValueError):
+        fp.timeline(4, 4, 10.0, np.random.default_rng(0))
+
+
+def test_retry_policy_semantics():
+    rng = np.random.default_rng(0)
+    assert NoRetry().delay_s(1, 0.0, rng) is None
+    fr = FixedRetry(delay=0.05, max_attempts=3)
+    assert fr.delay_s(3, 0.0, rng) == pytest.approx(0.05)
+    assert fr.delay_s(4, 0.0, rng) is None
+    eb = ExponentialBackoff(base_s=0.02, cap_s=1.0, max_attempts=6)
+    prev = 0.0
+    for att in range(1, 7):
+        d = eb.delay_s(att, prev, rng)
+        assert 0.02 <= d <= 1.0         # decorrelated jitter stays in range
+        prev = d
+    assert eb.delay_s(7, prev, rng) is None
+
+
+def test_retry_budget_circuit_breaker():
+    b = RetryBudget(ratio=0.1, min_tokens=2)
+    assert b.allows(0, 0)
+    assert b.allows(1, 0)
+    assert not b.allows(2, 0)           # min tokens exhausted
+    assert b.allows(11, 100)            # 2 + 10 tokens at 100 arrivals
+    assert not b.allows(12, 100)
+
+
+# ---------------------------------------------------------------------------
+# engine integration
+# ---------------------------------------------------------------------------
+
+def test_empty_plan_runs_clean():
+    sim = ClusterSim(n_dscs=4, n_cpu=4, seed=0, faults=FaultPlan())
+    tr = _trace(sim)
+    fs = sim.fault_stats()
+    assert fs["enabled"]
+    assert sum(fs["injected"].values()) == 0
+    assert fs["goodput"]["goodput_frac"] == 1.0
+    assert int(np.count_nonzero(tr.completed)) == tr.n
+
+
+def test_faulted_run_is_deterministic():
+    fp = FaultPlan(drive_mtbf_s=3.0, drive_mttr_s=5.0, stall_mtbf_s=4.0,
+                   cpu_mtbf_s=6.0, cpu_mttr_s=4.0, backing_fail_p=0.1,
+                   repair=RepairModel(), detect_timeout_s=0.2)
+    traces, stats = [], []
+    for _ in range(2):
+        sim = ClusterSim(n_dscs=4, n_cpu=4, seed=21, faults=fp,
+                         tier=TierConfig(replication_k=2, n_objects=64))
+        traces.append(_trace(sim, dur=10.0))
+        stats.append(sim.fault_stats())
+    a, b = traces
+    for f in ("arrival", "finish", "winner", "drive", "start", "service",
+              "hedged"):
+        assert np.array_equal(getattr(a, f), getattr(b, f), equal_nan=True), f
+    assert stats[0] == stats[1]
+
+
+def test_drive_failstop_loses_inflight_and_retry_recovers():
+    fp_none = FaultPlan(events=(DriveFailure(time=1.0, drive=0),),
+                        retry=NoRetry())
+    sim = ClusterSim(n_dscs=2, n_cpu=8, seed=13, faults=fp_none)
+    _trace(sim, rate=300.0)
+    fs = sim.fault_stats()
+    assert fs["injected"]["drive_fail"] == 1
+    assert fs["lost"] > 0
+    assert fs["abandoned"] > 0          # no retry: lost => abandoned
+    assert fs["goodput"]["goodput_frac"] < 1.0
+
+    fp_retry = FaultPlan(events=(DriveFailure(time=1.0, drive=0),),
+                         retry=ExponentialBackoff(),
+                         retry_budget=RetryBudget(ratio=1.0, min_tokens=1024))
+    sim2 = ClusterSim(n_dscs=2, n_cpu=8, seed=13, faults=fp_retry)
+    _trace(sim2, rate=300.0)
+    fs2 = sim2.fault_stats()
+    assert fs2["retries"]["scheduled"] > 0
+    assert fs2["abandoned"] < fs["abandoned"]
+    assert (fs2["goodput"]["goodput_frac"]
+            > fs["goodput"]["goodput_frac"])
+
+
+def test_degrades_to_cpu_when_home_drive_dead():
+    # the only drive dies and never recovers: accelerable requests must
+    # gracefully degrade to the CPU path + backing fetch, not be dropped
+    fp = FaultPlan(events=(DriveFailure(time=0.5, drive=0),))
+    sim = ClusterSim(n_dscs=1, n_cpu=8, seed=0, faults=fp)
+    tr = _trace(sim, rate=40.0, dur=6.0)
+    fs = sim.fault_stats()
+    assert fs["degraded"] > 0
+    assert fs["goodput"]["goodput_frac"] == 1.0
+    late = tr.winner[tr.arrival > 1.0]
+    assert np.all(late == 1)            # everything after the loss is CPU-won
+
+
+def test_transient_failure_recovers_service():
+    fp = FaultPlan(events=(DriveFailure(time=1.0, drive=0, down_s=2.0),))
+    sim = ClusterSim(n_dscs=1, n_cpu=4, seed=0, faults=fp)
+    tr = _trace(sim, rate=30.0, dur=8.0)
+    fs = sim.fault_stats()
+    assert fs["injected"]["drive_recover"] == 1
+    assert fs["unavailability"]["total_s"] == pytest.approx(2.0)
+    # post-recovery accelerable arrivals run on the drive again
+    assert np.any(tr.winner[tr.arrival > 3.5] == 0)
+
+
+def test_stall_plus_detection_hedges():
+    fp = FaultPlan(events=(DriveStall(time=0.5, drive=0, duration_s=4.0,
+                                      factor=50.0),),
+                   detect_timeout_s=0.1)
+    sim = ClusterSim(n_dscs=1, n_cpu=4, seed=0, faults=fp)
+    _trace(sim, rate=30.0, dur=5.0)
+    fs = sim.fault_stats()
+    assert fs["injected"]["stall"] == 1
+    assert fs["detect_hedges"] > 0      # stalled requests were hedged
+    assert fs["goodput"]["goodput_frac"] == 1.0
+
+
+def test_cpu_crash_never_kills_last_node():
+    fp = FaultPlan(cpu_mtbf_s=0.5, cpu_mttr_s=None)
+    sim = ClusterSim(n_dscs=2, n_cpu=2, seed=0, faults=fp)
+    _trace(sim, rate=40.0, dur=6.0)
+    fs = sim.fault_stats()
+    assert fs["injected"]["cpu_crash"] == 1         # only n_cpu - 1 may die
+    assert fs["injected"]["cpu_crash_skipped"] > 0
+    assert fs["goodput"]["goodput_frac"] == 1.0
+
+
+def test_repair_rereplicates_lost_objects():
+    tier = TierConfig(replication_k=2, n_objects=64)
+    fp = FaultPlan(events=(DriveFailure(time=2.0, drive=1),),
+                   repair=RepairModel(bandwidth_bps=50e6))
+    sim = ClusterSim(n_dscs=4, n_cpu=4, seed=21, faults=fp, tier=tier)
+    _trace(sim, dur=10.0)
+    fs = sim.fault_stats()
+    assert fs["repair"]["jobs"] == 1
+    assert fs["repair"]["objects"] > 0
+    assert fs["repair"]["bytes"] > 0
+    assert fs["repair"]["seconds"] == pytest.approx(
+        fs["repair"]["bytes"] / 50e6)
+
+
+def test_timeout_abandons_and_counts():
+    sim = ClusterSim(n_dscs=2, n_cpu=2, seed=13)
+    tr = _trace(sim, rate=200.0, dur=5.0, timeout_s=0.3)
+    fs = sim.fault_stats()
+    assert not fs["enabled"]            # deadline-only: fault layer off
+    assert fs["deadline_abandoned"] > 0
+    aband = int(np.count_nonzero(tr.winner == -1))
+    comp = int(np.count_nonzero(tr.completed))
+    assert aband == fs["deadline_abandoned"]
+    assert comp + aband == tr.n         # conservation, no in-flight (drained)
+    assert np.all(np.isnan(tr.finish[tr.winner == -1]))
+    assert sim.telemetry.get("deadline_abandoned") == aband
+
+
+def test_timeout_validation():
+    sim = ClusterSim(n_dscs=2, n_cpu=2, seed=0)
+    with pytest.raises(ValueError):
+        _trace(sim, timeout_s=0.0)
+
+
+def test_fault_stats_none_without_plan_or_timeout():
+    sim = ClusterSim(n_dscs=2, n_cpu=2, seed=0)
+    _trace(sim, rate=20.0, dur=2.0)
+    assert sim.fault_stats() is None
+
+
+# ---------------------------------------------------------------------------
+# autoscaler composition (satellite: power-down charges repair)
+# ---------------------------------------------------------------------------
+
+def test_autoscaler_power_down_charges_repair():
+    tier_kw = dict(replication_k=2, n_objects=64)
+    fp = FaultPlan(repair=RepairModel(bandwidth_bps=100e6))
+    kw = dict(arrivals=make_arrivals("diurnal", 40.0, period_s=8.0),
+              duration_s=16.0, n_dscs=6, n_cpu=6, sla_s=0.6, seed=3)
+    scaled = evaluate_policy(ReactivePolicy(min_dscs_on=0), PIPES,
+                             tier=TierConfig(**tier_kw), faults=fp, **kw)
+    static = evaluate_policy(StaticPolicy(6, 6), PIPES,
+                             tier=TierConfig(**tier_kw), faults=fp, **kw)
+    assert scaled.repair_gb > 0.0       # power-downs re-replicate
+    assert static.repair_gb == 0.0      # full fleet never powers down
+    # and the repair traffic lands in the cost scorecard
+    from repro.core.autoscale import fleet_cost_usd
+    ps = {"cpu": {"powered_s": 0.0}, "dscs": {"powered_s": 0.0}}
+    c = fleet_cost_usd(ps, 0.0, repair_bytes=5e9)
+    assert c["repair"] == pytest.approx(0.1)        # 5 GB * $0.02
+    assert c["total"] == pytest.approx(c["repair"])
+
+
+# ---------------------------------------------------------------------------
+# benchmarks/run.py regression + fig23 gate
+# ---------------------------------------------------------------------------
+
+def test_run_py_exits_nonzero_on_figure_failure(monkeypatch, capsys):
+    import benchmarks.figures as figures_mod
+    from benchmarks import run as run_mod
+
+    def fig99_boom():
+        raise RuntimeError("mid-sweep failure")
+
+    def fig98_fine():
+        return [("fig98/ok", 1.0, "")]
+
+    monkeypatch.setattr(figures_mod, "ALL_FIGURES", [fig98_fine, fig99_boom])
+    with pytest.raises(SystemExit) as ei:
+        run_mod.main(["--only", "fig9", "--json"])
+    assert "fig99_boom" in str(ei.value)
+    # the JSON already emitted stays valid for the figures that did run
+    import json
+    out = capsys.readouterr().out
+    rows = json.loads(out[out.index("["):])
+    assert any(r["name"] == "fig98/ok" for r in rows)
+
+
+def test_fig23_smoke_headline_gate(monkeypatch):
+    import benchmarks.figures as figures_mod
+    monkeypatch.setattr(figures_mod, "SMOKE", True)
+    rows = figures_mod.fig23_availability()
+    by_name = {n: v for n, v, _ in rows}
+    gain = by_name["fig23/headline/sla_gain"]
+    assert gain >= 2.0                  # the CI-gated acceptance criterion
+    assert by_name["fig23/expo_k2_repair/sla_frac"] > \
+        by_name["fig23/none_k1/sla_frac"]
+    assert 0.0 < by_name["fig23/none_k1/sla_frac"] < 1.0

@@ -163,6 +163,65 @@ def test_rglru_state_is_contraction(b, s, w):
     assert bool(jnp.all(seqs[:, -1] <= seqs[:, 0] + 1e-5))
 
 
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000),                      # sim seed
+       st.integers(1, 3),                           # replication k
+       st.floats(2.0, 20.0),                        # drive MTBF
+       st.sampled_from([None, 4.0]),                # MTTR (None = fail-stop)
+       st.sampled_from(["none", "fixed", "expo"]),  # retry policy
+       st.booleans(),                               # repair on/off
+       st.sampled_from([None, 0.2, 0.6]))           # timeout_s
+def test_request_conservation_under_faults(seed, k, mtbf, mttr, retry,
+                                           repair, timeout_s):
+    """Every arrival ends exactly once — completed, abandoned, or
+    in-flight at the horizon — under arbitrary fault plans: retries never
+    double-complete a request, abandonment and completion are mutually
+    exclusive, and the served busy-seconds stay within the fleet's
+    physical capacity."""
+    from repro.core.faults import (ExponentialBackoff, FaultPlan, FixedRetry,
+                                   NoRetry, RepairModel)
+    from repro.core.function import standard_pipeline
+    from repro.core.scheduler import ClusterSim
+    from repro.core.arrivals import PoissonProcess
+    from repro.core.tiering import TierConfig
+
+    n_dscs, n_cpu, dur = 3, 3, 4.0
+    fp = FaultPlan(
+        drive_mtbf_s=mtbf, drive_mttr_s=mttr,
+        stall_mtbf_s=8.0, stall_s=1.0,
+        cpu_mtbf_s=3 * mtbf, cpu_mttr_s=mttr,
+        backing_fail_p=0.1,
+        retry={"none": NoRetry(), "fixed": FixedRetry(),
+               "expo": ExponentialBackoff()}[retry],
+        repair=RepairModel(bandwidth_bps=50e6) if repair else None,
+        detect_timeout_s=0.15)
+    sim = ClusterSim(n_dscs=n_dscs, n_cpu=n_cpu, seed=seed, faults=fp,
+                     tier=TierConfig(replication_k=k, n_objects=32))
+    tr = sim.engine.run_soa([standard_pipeline("asset_damage")],
+                            arrivals=PoissonProcess(rate=60.0),
+                            duration_s=dur, timeout_s=timeout_s)
+    fs = sim.fault_stats()
+    completed = int(np.count_nonzero(tr.completed))
+    abandoned = int(np.count_nonzero(tr.winner == -1))
+    # terminal states are exclusive and exhaustive over the trace
+    assert completed + abandoned == tr.n
+    assert not np.any(tr.completed & (tr.winner == -1))
+    # a completed request has exactly one winning path and a finite finish
+    fin = tr.finish[tr.completed]
+    assert np.all(np.isfinite(fin))
+    assert np.all(tr.winner[tr.completed] >= 0)
+    assert np.all(np.isnan(tr.finish[tr.winner == -1]))
+    # fault_stats agrees with the trace (goodput never double-counts)
+    assert fs["goodput"]["offered"] == tr.n
+    assert fs["goodput"]["completed"] == completed
+    assert fs["abandoned"] + fs["deadline_abandoned"] == abandoned
+    # busy seconds can't exceed fleet capacity over the run horizon
+    ps = sim.engine.power_stats()
+    horizon = float(ps["horizon"])
+    assert -1e-9 <= float(ps["dscs"]["busy_s"]) <= n_dscs * horizon + 1e-6
+    assert -1e-9 <= float(ps["cpu"]["busy_s"]) <= n_cpu * horizon + 1e-6
+
+
 @settings(max_examples=8, deadline=None)
 @given(st.sampled_from([32, 64, 128]), st.sampled_from([16, 32, 64]))
 def test_ssd_chunk_invariance(s, chunk):
