@@ -14,12 +14,15 @@ streams are bit-identical), so wall-clock is the only thing that differs.
     python -m benchmarks.bench_engine --smoke      # CI gate: 10^4-request config,
                                                    # fail on >3x regression vs the
                                                    # committed BENCH_engine.json
+    python -m benchmarks.bench_engine --smoke-shards  # CI gate: sharded engine at
+                                                   # n_shards in {1,2,4}, aggregate
+                                                   # equality + relative speedup
     python -m benchmarks.bench_engine --one '<json>'  # internal: one config/engine
 
-``BENCH_engine.json`` schema (``schema: bench_engine/v1``)::
+``BENCH_engine.json`` schema (``schema: bench_engine/v2``)::
 
     {
-      "schema": "bench_engine/v1",
+      "schema": "bench_engine/v2",
       "host": {"python": ..., "numpy": ...},
       "configs": [
         {
@@ -31,17 +34,29 @@ streams are bit-identical), so wall-clock is the only thing that differs.
           "hedge_budget_s": 0.08,
           "engine":   {"requests": ..., "events": ..., "wall_s": ...,
                        "req_per_s": ..., "peak_rss_kb": ...},
-          "baseline": {... same fields, "events" omitted ...} | null,
+          "sharded":  {"n_shards": 8, "processes": 1, "requests": ...,
+                       "events": ..., "wall_s": ...,   # best of 3 in-process
+                       "cold_wall_s": ...,             # first rep (cold caches)
+                       "req_per_s": ..., "peak_rss_kb": ...,
+                       "speedup_vs_single": sharded/engine req_per_s},
+          "baseline": {... engine fields, "events" omitted ...} | null,
           "speedup": engine.req_per_s / baseline.req_per_s | null
         }, ...
       ]
     }
 
-The smoke gate runs BOTH engines on the current host and compares the
-measured optimized-vs-reference speedup against the committed smoke-config
-speedup, failing on a >3x drop — host speed cancels out of the ratio, so
-only a real regression in the optimized hot path (not a slow CI runner)
-trips the gate.
+The ``v2`` shards axis measures ``ClusterEngine.run_sharded`` on the
+partitioned fast path: best of 3 reps in one subprocess (the placement
+table is memoized process-wide, matching how a resident service would
+run; ``cold_wall_s`` records the first cold rep for transparency).
+
+Both smoke gates are RELATIVE: they rerun the comparison on the current
+host and check the measured ratio against the committed one, failing on a
+>3x drop — host speed cancels out of the ratio, so only a real regression
+in the optimized hot path (not a slow CI runner) trips the gate.
+``--smoke-shards`` additionally asserts shard-count independence at smoke
+scale: the partitioned path must produce byte-identical finish times for
+``n_shards`` 2 and 4.
 """
 from __future__ import annotations
 
@@ -55,7 +70,8 @@ from pathlib import Path
 
 REPO = Path(__file__).resolve().parent.parent
 BENCH_PATH = REPO / "BENCH_engine.json"
-SCHEMA = "bench_engine/v1"
+SCHEMA = "bench_engine/v2"
+BENCH_SHARDS = 8                        # the headline shards-axis point
 
 # All configs run at utilization 0.95 — the SLA-knee operating point the
 # Fig. 12 throughput-under-SLA methodology probes, where queueing (and the
@@ -103,6 +119,28 @@ def _run_one(cfg: dict, which: str) -> dict:
         trace = eng.run_soa(pipes, arrivals=arrivals, duration_s=duration)
         wall = time.perf_counter() - t0
         n, events = trace.n, trace.events
+    elif which == "sharded":
+        from repro.core.engine import ClusterEngine
+        n_shards = int(cfg.get("n_shards", BENCH_SHARDS))
+        processes = int(cfg.get("processes", 1))
+        walls = []
+        for _ in range(3):              # best of 3; rep 1 is the cold one
+            eng = ClusterEngine(n_dscs=cfg["n_dscs"], n_cpu=cfg["n_cpu"],
+                                hedge_budget_s=cfg["hedge_budget_s"], seed=0)
+            t0 = time.perf_counter()
+            trace = eng.run_sharded(pipes, arrivals=arrivals,
+                                    duration_s=duration, n_shards=n_shards,
+                                    processes=processes)
+            walls.append(time.perf_counter() - t0)
+        wall = min(walls)
+        n, events = trace.n, trace.events
+        out = {"n_shards": n_shards, "processes": processes,
+               "requests": n, "events": events, "wall_s": round(wall, 3),
+               "cold_wall_s": round(walls[0], 3),
+               "req_per_s": round(n / wall, 1),
+               "peak_rss_kb":
+                   resource.getrusage(resource.RUSAGE_SELF).ru_maxrss}
+        return out
     else:
         from repro.core.engine_ref import ReferenceClusterEngine
         eng = ReferenceClusterEngine(n_dscs=cfg["n_dscs"], n_cpu=cfg["n_cpu"],
@@ -165,10 +203,82 @@ def _smoke(args) -> int:
     return 0
 
 
+def _smoke_shards(args) -> int:
+    """Shard-matrix smoke: n_shards in {1, 2, 4} on the smoke config.
+
+    Gates the committed shards-axis speedup at reduced scale (relative,
+    like ``--smoke``): the measured sharded-vs-single throughput ratio
+    must stay within 3x of the committed ``speedup_vs_single``.  Also
+    asserts shard-count independence — the partitioned path must emit
+    byte-identical finish times for 2 and 4 shards.
+    """
+    from repro.core.arrivals import make_arrivals
+    from repro.core.engine import ClusterEngine
+    from repro.core.function import standard_pipeline
+    from repro.core.latency import LatencyModel
+    from repro.core.platforms import PLATFORMS
+
+    pipes = [standard_pipeline(n)
+             for n in ("asset_damage", "content_moderation")]
+    lm = LatencyModel()
+    svc = sum(lm.e2e(PLATFORMS["DSCS-Serverless"], p.workload, q=0.5)
+              for p in pipes) / len(pipes)
+    rate = SMOKE["utilization"] * SMOKE["n_dscs"] / svc
+    duration = SMOKE["n_requests_target"] / rate
+
+    rps, finishes = {}, {}
+    for k in (1, 2, 4):
+        best, trace = 0.0, None
+        for _ in range(3):
+            eng = ClusterEngine(n_dscs=SMOKE["n_dscs"],
+                                n_cpu=SMOKE["n_cpu"],
+                                hedge_budget_s=SMOKE["hedge_budget_s"],
+                                seed=0)
+            t0 = time.perf_counter()
+            trace = eng.run_sharded(pipes,
+                                    arrivals=make_arrivals("poisson", rate),
+                                    duration_s=duration, n_shards=k,
+                                    processes=1)
+            best = max(best, trace.n / (time.perf_counter() - t0))
+        rps[k] = best
+        finishes[k] = trace.finish.tobytes()
+        print(f"smoke-shards: n_shards={k} {trace.n} requests, "
+              f"{best:,.0f} req/s (best of 3)")
+    if finishes[2] != finishes[4]:
+        print("FAIL: partitioned traces differ between 2 and 4 shards")
+        return 1
+    print("OK: n_shards=2 and n_shards=4 finish streams byte-identical")
+    speedup = max(rps[2], rps[4]) / rps[1]
+    print(f"smoke-shards: sharded-vs-single speedup {speedup:.1f}x")
+    if not BENCH_PATH.exists():
+        print(f"no committed {BENCH_PATH.name}; run is informational")
+        return 0
+    committed = json.loads(BENCH_PATH.read_text())
+    ref = next((c for c in committed.get("configs", [])
+                if c["name"] == SMOKE["name"]), None)
+    ref_speedup = (ref or {}).get("sharded", {}) or {}
+    ref_speedup = ref_speedup.get("speedup_vs_single")
+    if not ref_speedup:
+        print("committed BENCH_engine.json has no sharded smoke entry; "
+              "skipping gate")
+        return 0
+    floor = ref_speedup / 3.0
+    if speedup < floor:
+        print(f"FAIL: measured sharded speedup {speedup:.1f}x is >3x below "
+              f"the committed {ref_speedup}x")
+        return 1
+    print(f"OK: within 3x of the committed {ref_speedup}x sharded speedup")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="10^4-request regression gate vs committed JSON")
+    ap.add_argument("--smoke-shards", action="store_true",
+                    dest="smoke_shards",
+                    help="shard-matrix gate: n_shards in {1,2,4} on the "
+                         "smoke config, equality + relative speedup")
     ap.add_argument("--no-baseline", action="store_true",
                     help="skip the slow frozen-reference baseline runs")
     ap.add_argument("--one", default="",
@@ -183,6 +293,8 @@ def main(argv=None) -> int:
         return 0
     if args.smoke:
         return _smoke(args)
+    if args.smoke_shards:
+        return _smoke_shards(args)
 
     import numpy as np
     out = {"schema": SCHEMA,
@@ -197,6 +309,15 @@ def main(argv=None) -> int:
         print(f"  {row['engine']['req_per_s']:>12,.0f} req/s   "
               f"({row['engine']['wall_s']}s, "
               f"{row['engine']['peak_rss_kb'] // 1024} MB)", flush=True)
+        print(f"[{cfg['name']}] sharded engine ({BENCH_SHARDS} shards) ...",
+              flush=True)
+        row["sharded"] = _spawn(cfg, "sharded")
+        row["sharded"]["speedup_vs_single"] = round(
+            row["sharded"]["req_per_s"] / row["engine"]["req_per_s"], 2)
+        print(f"  {row['sharded']['req_per_s']:>12,.0f} req/s   "
+              f"(best of 3, cold {row['sharded']['cold_wall_s']}s) "
+              f"{row['sharded']['speedup_vs_single']}x vs single",
+              flush=True)
         if want_baseline:
             print(f"[{cfg['name']}] frozen pre-PR2 baseline ...", flush=True)
             row["baseline"] = _spawn(cfg, "baseline")

@@ -1,7 +1,10 @@
 """Benchmark harness: one function per paper table/figure, plus kernel
 micro-benchmarks and the roofline summary.  Prints ``name,us_per_call,
 derived`` CSV (for analytic figures the middle column is the metric value),
-or a JSON array of ``{name, value, derived}`` rows with ``--json``.
+or a ``figures/v2`` JSON envelope ``{schema, seed, smoke, rows}`` with
+``--json`` — each row is ``{name, value, derived, ci95}`` where ``ci95``
+is null for a single run and a ``[mean, halfwidth]`` pair when emitted by
+``benchmarks.montecarlo``.
 
     python -m benchmarks.run                  # everything
     python -m benchmarks.run --only fig19     # one figure family
@@ -97,9 +100,13 @@ def main(argv=None) -> None:
                     help="shrink expensive simulation figures to the "
                          "CI-sized fast path (same structure and "
                          "acceptance ratios)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="simulation seed for every figure (montecarlo "
+                         "fans one config across many seeds)")
     args = ap.parse_args(argv)
     if args.smoke:
         figures_mod.SMOKE = True
+    figures_mod.SEED = args.seed
     figures = [f for f in ALL_FIGURES
                if args.only.lower() in f.__name__.lower()]
     if args.list_figs:
@@ -112,7 +119,7 @@ def main(argv=None) -> None:
     def emit(name, val, derived):
         if args.as_json:
             collected.append({"name": name, "value": float(val),
-                              "derived": str(derived)})
+                              "derived": str(derived), "ci95": None})
         else:
             print(f"{name},{val:.6g},{derived}")
             sys.stdout.flush()
@@ -139,7 +146,11 @@ def main(argv=None) -> None:
         for name, val, derived in _roofline_summary():
             emit(name, val, derived)
     if args.as_json:
-        json.dump(collected, sys.stdout, indent=2)
+        # figures/v2 envelope: single-run rows carry ci95=null; the
+        # montecarlo driver replaces them with [mean, halfwidth] pairs
+        json.dump({"schema": "figures/v2", "seed": args.seed,
+                   "smoke": bool(args.smoke), "rows": collected},
+                  sys.stdout, indent=2)
         print()
     if failures:
         # exit non-zero so CI smoke gates never read a partial sweep as

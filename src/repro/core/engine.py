@@ -438,13 +438,21 @@ def _placement(n_dscs: int, n: int) -> np.ndarray:
         start = 0 if arr is None else int(arr.size)
         size = max(n, 2 * start, 1024)
         sha1 = hashlib.sha1
-        from_bytes = int.from_bytes
-        tail = [from_bytes(sha1(b"req-%d" % i).digest(), "big") % n_dscs
-                for i in range(start, size)]
+        # one buffer of 20-byte digests, reduced mod n_dscs by vectorized
+        # 160-bit Horner steps: acc < n_dscs <= 2^31 keeps the uint64
+        # intermediate (acc << 32) + word exact, so the result is
+        # bit-identical to int.from_bytes(digest, "big") % n_dscs
+        buf = b"".join([sha1(b"req-%d" % i).digest()
+                        for i in range(start, size)])
+        words = np.frombuffer(buf, dtype=">u4").reshape(-1, 5).astype(np.uint64)
+        nd = np.uint64(n_dscs)
+        acc = words[:, 0] % nd
+        for j in range(1, 5):
+            acc = ((acc << np.uint64(32)) + words[:, j]) % nd
         grown = np.empty(size, dtype=np.int32)
         if start:
             grown[:start] = arr
-        grown[start:] = tail
+        grown[start:] = acc
         _PLACEMENT_CACHE[n_dscs] = arr = grown
     return arr[:n]
 
@@ -493,6 +501,7 @@ class ClusterEngine:
             faults.validate()
         self._sampler = _ServiceSampler(self.lm)
         self._qstate: Optional[dict] = None
+        self.last_shard_stats: Optional[dict] = None
         self._pstate: Optional[dict] = None
         self._tstate: Optional[dict] = None
         self._tierstate: Optional[dict] = None
@@ -2237,6 +2246,42 @@ class ClusterEngine:
             dscs_finish=as_np(dfin_a), cpu_finish=as_np(cfin_a),
             events=events,
             tenant=(src if mt else np.zeros(n, dtype=np.int32)))
+
+    # -- sharded execution ---------------------------------------------------
+    def run_sharded(self, pipelines: Optional[Sequence[Pipeline]] = None, *,
+                    arrivals: Optional[ArrivalProcess] = None,
+                    duration_s: float = 0.0,
+                    times: Optional[np.ndarray] = None,
+                    n_shards: int = 1,
+                    processes: Optional[int] = None,
+                    timeout_s: Optional[float] = None,
+                    epoch_count: int = 64,
+                    mailbox_capacity: Optional[int] = None) -> EngineTrace:
+        """Run the fleet sharded by drive partition across workers.
+
+        ``n_shards=1`` runs the classic event loop — byte-for-byte the
+        same trace :meth:`run_soa` produces (the golden-trace stream).
+        With ``n_shards >= 2`` the fleet is split into disjoint drive
+        partitions (plus weighted CPU slices) executed by
+        :mod:`repro.core.sharding`: shard-count- and process-count-
+        independent on the fault-free fast path, shard-isolated classic
+        loops under faults/tiering/deadlines.  ``processes`` bounds the
+        worker pool (default: one per shard up to the core count;
+        ``processes=1`` runs the shards serially in-process with
+        identical results).  ``epoch_count`` and ``mailbox_capacity``
+        tune the bounded cross-shard mailbox.  Multi-tenant runs are not
+        supported sharded — use ``n_shards=1``.
+        """
+        if n_shards == 1:
+            return self.run_soa(pipelines, arrivals=arrivals,
+                                duration_s=duration_s, times=times,
+                                timeout_s=timeout_s)
+        from repro.core.sharding import run_partitioned
+        return run_partitioned(self, pipelines, arrivals=arrivals,
+                               duration_s=duration_s, times=times,
+                               n_shards=n_shards, processes=processes,
+                               timeout_s=timeout_s, epoch_count=epoch_count,
+                               mailbox_capacity=mailbox_capacity)
 
     # -- telemetry -----------------------------------------------------------
     def queue_stats(self) -> Dict[str, Dict[str, float]]:

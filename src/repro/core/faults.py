@@ -329,3 +329,55 @@ class FaultPlan:
                                 0.0))
         out.sort()
         return out
+
+
+# --------------------------------------------------------------------------
+# shard-local bookkeeping merge (sharded runs)
+# --------------------------------------------------------------------------
+
+def merge_fault_stats(states: List[Optional[dict]],
+                      offered: int) -> Optional[dict]:
+    """Merge per-shard ``fault_stats()`` dicts into one fleet view.
+
+    Each shard of a sharded run injects faults and repairs replicas over
+    its *own* drive/CPU slice from its own seed child; this folds those
+    shard-local books back into the single-engine schema: counters sum,
+    per-drive unavailability concatenates in shard (= drive) order, and
+    the goodput fraction is recomputed against the fleet-wide ``offered``
+    total.  Returns ``None`` when no shard tracked faults or deadlines.
+    """
+    live = [s for s in states if s is not None]
+    if not live:
+        return None
+    completed = sum(s["goodput"]["completed"] for s in live)
+    goodput = {"offered": offered, "completed": completed,
+               "goodput_frac": completed / offered if offered else 0.0}
+    dead = sum(s["deadline_abandoned"] for s in live)
+    full = [s for s in live if s["enabled"]]
+    if not full:
+        return {"enabled": False, "deadline_abandoned": dead,
+                "goodput": goodput}
+    per_drive: List[float] = []
+    for s in live:
+        per_drive += s["unavailability"]["per_drive_s"] if s["enabled"] else []
+    out = {
+        "enabled": True,
+        "injected": {k: sum(s["injected"][k] for s in full)
+                     for k in full[0]["injected"]},
+        "lost": sum(s["lost"] for s in full),
+        "retries": {k: sum(s["retries"][k] for s in full)
+                    for k in full[0]["retries"]},
+        "abandoned": sum(s["abandoned"] for s in full),
+        "deadline_abandoned": dead,
+        "degraded": sum(s["degraded"] for s in full),
+        "detect_hedges": sum(s["detect_hedges"] for s in full),
+        "unavailability": {"per_drive_s": per_drive,
+                           "total_s": sum(per_drive)},
+        "repair": {k: sum(s["repair"][k] for s in full)
+                   for k in full[0]["repair"]},
+        "goodput": goodput,
+    }
+    return out
+
+
+__all__.append("merge_fault_stats")

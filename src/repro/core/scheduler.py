@@ -63,6 +63,8 @@ from repro.core.tenancy import (DriveScheduler,  # noqa: F401
                                 FCFSRunToCompletion, SpatialPartition,
                                 TenantReport, TenantSpec, WeightedTimeSlice,
                                 jain_index, tenant_reports)
+from repro.core.sharding import (MailboxOverflow, ShardMailbox,  # noqa: F401
+                                 ShardPlan)
 from repro.core.tiering import (DriveCache, MigrationPolicy,  # noqa: F401
                                 TierConfig)
 
@@ -70,9 +72,10 @@ __all__ = ["AutoscaleAction", "AutoscalePolicy", "AutoscaleReport",
            "ClusterSim", "CpuCrash", "DriveCache", "DriveFailure",
            "DriveScheduler", "DriveStall", "EWMAPolicy",
            "ExponentialBackoff", "FCFSRunToCompletion", "FaultPlan",
-           "FixedRetry", "FleetSnapshot", "MigrationPolicy", "NoRetry",
-           "ReactivePolicy", "RepairModel", "RequestResult", "RetryBudget",
-           "RetryPolicy", "SpatialPartition", "StaticPolicy", "Telemetry",
+           "FixedRetry", "FleetSnapshot", "MailboxOverflow",
+           "MigrationPolicy", "NoRetry", "ReactivePolicy", "RepairModel",
+           "RequestResult", "RetryBudget", "RetryPolicy", "ShardMailbox",
+           "ShardPlan", "SpatialPartition", "StaticPolicy", "Telemetry",
            "TenantReport", "TenantSpec", "TierConfig", "WeightedTimeSlice",
            "WorstTenantPolicy", "jain_index", "tenant_reports"]
 
@@ -121,6 +124,36 @@ class ClusterSim:
                              "(rps would be silently ignored)")
         return self.engine.run(pipelines, arrivals=arrivals,
                                duration_s=duration_s, timeout_s=timeout_s)
+
+    def run_sharded(self, pipelines: List[Pipeline], *,
+                    rps: Optional[float] = None, duration_s: float = 120.0,
+                    arrivals: Optional[ArrivalProcess] = None,
+                    n_shards: int = 1, processes: Optional[int] = None,
+                    timeout_s: Optional[float] = None) -> EngineTrace:
+        """Simulate the same offered load sharded by drive partition.
+
+        ``n_shards=1`` is the classic event loop (identical to ``run``,
+        but returning the raw :class:`EngineTrace` arrays instead of
+        materialized :class:`RequestResult` objects — the natural form
+        at the fleet scales sharding targets).  With ``n_shards >= 2``
+        the fleet splits into disjoint drive partitions executed by
+        :mod:`repro.core.sharding`; see
+        :meth:`ClusterEngine.run_sharded`.  ``queue_stats``,
+        ``power_stats``, ``fault_stats`` and ``tier_stats`` all report
+        the merged fleet view afterwards.
+        """
+        if arrivals is None:
+            if rps is None:
+                raise ValueError("pass rps= or arrivals=")
+            arrivals = PoissonProcess(rate=rps)
+        elif rps is not None:
+            raise ValueError("pass either rps= or arrivals=, not both "
+                             "(rps would be silently ignored)")
+        return self.engine.run_sharded(pipelines, arrivals=arrivals,
+                                       duration_s=duration_s,
+                                       n_shards=n_shards,
+                                       processes=processes,
+                                       timeout_s=timeout_s)
 
     def queue_stats(self):
         """Queue-depth telemetry from the most recent ``run``."""

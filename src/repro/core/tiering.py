@@ -278,3 +278,50 @@ class MigrationController:
             self.log.append((t, o, frm, to))
         self.moves += len(out)
         return out
+
+
+# --------------------------------------------------------------------------
+# shard-local bookkeeping merge (sharded runs)
+# --------------------------------------------------------------------------
+
+def merge_tier_stats(states: List[Optional[dict]]) -> Optional[dict]:
+    """Merge per-shard ``tier_stats()`` dicts into one fleet view.
+
+    Sharded runs build replica tables and caches *shard-local* (each
+    shard replicates its objects across its own drives only, so tier
+    routing never crosses a shard boundary); this folds the books back
+    into the single-engine schema: hit/miss/eviction counters and
+    backing-store traffic sum, per-drive cache stats concatenate in
+    shard (= drive) order, object counts add across the shard-local
+    tables, and migration logs concatenate with moves summed.  Returns
+    ``None`` when tiering was off.
+    """
+    live = [s for s in states if s is not None]
+    if not live:
+        return None
+    hits = sum(s["cache"]["hits"] for s in live)
+    misses = sum(s["cache"]["misses"] for s in live)
+    per_drive: List[dict] = []
+    for s in live:
+        per_drive += s["cache"]["per_drive"]
+    migs = [s["migration"] for s in live if s["migration"] is not None]
+    return {
+        "replication_k": live[0]["replication_k"],
+        "n_objects": sum(s["n_objects"] for s in live),
+        "cache_bytes": live[0]["cache_bytes"],
+        "cache": {
+            "hits": hits, "misses": misses,
+            "hit_rate": hits / (hits + misses) if hits + misses else 0.0,
+            "evictions": sum(s["cache"]["evictions"] for s in live),
+            "per_drive": per_drive,
+        },
+        "backing_fetches": sum(s["backing_fetches"] for s in live),
+        "backing_s": sum(s["backing_s"] for s in live),
+        "migration": (None if not migs else
+                      {"moves": sum(m["moves"] for m in migs),
+                       "epochs": max(m["epochs"] for m in migs),
+                       "log": [e for m in migs for e in m["log"]]}),
+    }
+
+
+__all__.append("merge_tier_stats")

@@ -476,3 +476,21 @@ def test_none_action_leaves_fleet_untouched():
     watched = ClusterEngine(**kw).run_soa(
         PIPES, arrivals=arr, duration_s=5, controller=Watch()).to_results()
     assert watched == plain
+
+
+def test_evaluate_policy_all_abandoned_is_nan_safe():
+    """A timeout shorter than any service abandons every request: the
+    percentiles must report inf (not NaN or a crash), SLA attainment and
+    cost must stay well-defined."""
+    rep = evaluate_policy(StaticPolicy(4, 4), ACCEL,
+                          arrivals=PoissonProcess(rate=50.0),
+                          duration_s=3.0, n_dscs=4, n_cpu=4, sla_s=0.6,
+                          seed=11, timeout_s=1e-6)
+    assert rep.n_requests > 0
+    assert rep.sla_met == 0
+    assert rep.sla_frac == 0.0
+    assert rep.p50_s == math.inf and rep.p99_s == math.inf
+    assert rep.cost_per_sla_req_usd == math.inf
+    assert rep.energy_per_req_j >= 0.0
+    assert not any(isinstance(v, float) and math.isnan(v)
+                   for v in vars(rep).values())

@@ -270,8 +270,9 @@ def test_run_py_exits_nonzero_on_figure_failure(monkeypatch, capsys):
     # the JSON already emitted stays valid for the figures that did run
     import json
     out = capsys.readouterr().out
-    rows = json.loads(out[out.index("["):])
-    assert any(r["name"] == "fig98/ok" for r in rows)
+    envelope = json.loads(out[out.index("{"):])
+    assert envelope["schema"] == "figures/v2"
+    assert any(r["name"] == "fig98/ok" for r in envelope["rows"])
 
 
 def test_fig23_smoke_headline_gate(monkeypatch):

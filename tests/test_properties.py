@@ -170,14 +170,16 @@ def test_rglru_state_is_contraction(b, s, w):
        st.sampled_from([None, 4.0]),                # MTTR (None = fail-stop)
        st.sampled_from(["none", "fixed", "expo"]),  # retry policy
        st.booleans(),                               # repair on/off
-       st.sampled_from([None, 0.2, 0.6]))           # timeout_s
+       st.sampled_from([None, 0.2, 0.6]),           # timeout_s
+       st.sampled_from([1, 2, 4]))                  # shard count
 def test_request_conservation_under_faults(seed, k, mtbf, mttr, retry,
-                                           repair, timeout_s):
+                                           repair, timeout_s, n_shards):
     """Every arrival ends exactly once — completed, abandoned, or
     in-flight at the horizon — under arbitrary fault plans: retries never
     double-complete a request, abandonment and completion are mutually
     exclusive, and the served busy-seconds stay within the fleet's
-    physical capacity."""
+    physical capacity.  Holds under any shard count: sharded runs inject
+    shard-local faults but must keep the fleet-wide books exact."""
     from repro.core.faults import (ExponentialBackoff, FaultPlan, FixedRetry,
                                    NoRetry, RepairModel)
     from repro.core.function import standard_pipeline
@@ -185,7 +187,7 @@ def test_request_conservation_under_faults(seed, k, mtbf, mttr, retry,
     from repro.core.arrivals import PoissonProcess
     from repro.core.tiering import TierConfig
 
-    n_dscs, n_cpu, dur = 3, 3, 4.0
+    n_dscs, n_cpu, dur = 4, 4, 4.0
     fp = FaultPlan(
         drive_mtbf_s=mtbf, drive_mttr_s=mttr,
         stall_mtbf_s=8.0, stall_s=1.0,
@@ -197,9 +199,10 @@ def test_request_conservation_under_faults(seed, k, mtbf, mttr, retry,
         detect_timeout_s=0.15)
     sim = ClusterSim(n_dscs=n_dscs, n_cpu=n_cpu, seed=seed, faults=fp,
                      tier=TierConfig(replication_k=k, n_objects=32))
-    tr = sim.engine.run_soa([standard_pipeline("asset_damage")],
-                            arrivals=PoissonProcess(rate=60.0),
-                            duration_s=dur, timeout_s=timeout_s)
+    tr = sim.engine.run_sharded([standard_pipeline("asset_damage")],
+                                arrivals=PoissonProcess(rate=60.0),
+                                duration_s=dur, timeout_s=timeout_s,
+                                n_shards=n_shards)
     fs = sim.fault_stats()
     completed = int(np.count_nonzero(tr.completed))
     abandoned = int(np.count_nonzero(tr.winner == -1))

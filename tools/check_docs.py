@@ -24,6 +24,7 @@ from pathlib import Path
 
 REPO = Path(__file__).resolve().parent.parent
 sys.path.insert(0, str(REPO / "src"))
+sys.path.insert(1, str(REPO))           # README examples import benchmarks.*
 
 # [text](target) — excludes images' leading "!" capture on purpose: image
 # targets must resolve too, and the regex matches them the same way
