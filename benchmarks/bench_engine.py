@@ -19,10 +19,10 @@ streams are bit-identical), so wall-clock is the only thing that differs.
                                                    # equality + relative speedup
     python -m benchmarks.bench_engine --one '<json>'  # internal: one config/engine
 
-``BENCH_engine.json`` schema (``schema: bench_engine/v2``)::
+``BENCH_engine.json`` schema (``schema: bench_engine/v3``)::
 
     {
-      "schema": "bench_engine/v2",
+      "schema": "bench_engine/v3",
       "host": {"python": ..., "numpy": ...},
       "configs": [
         {
@@ -32,23 +32,40 @@ streams are bit-identical), so wall-clock is the only thing that differs.
           "n_dscs": 256, "n_cpu": 256,
           "utilization": 0.95,            # offered DSCS load fraction
           "hedge_budget_s": 0.08,
-          "engine":   {"requests": ..., "events": ..., "wall_s": ...,
-                       "req_per_s": ..., "peak_rss_kb": ...},
-          "sharded":  {"n_shards": 8, "processes": 1, "requests": ...,
+          "engine":   {"backend": "classic", "requests": ..., "events": ...,
+                       "wall_s": ..., "req_per_s": ..., "peak_rss_kb": ...},
+          "sharded":  {"backend": "segmented", "n_shards": 8,
+                       "processes": 1, "requests": ...,
                        "events": ..., "wall_s": ...,   # best of 3 in-process
                        "cold_wall_s": ...,             # first rep (cold caches)
                        "req_per_s": ..., "peak_rss_kb": ...,
                        "speedup_vs_single": sharded/engine req_per_s},
-          "baseline": {... engine fields, "events" omitted ...} | null,
+          "baseline": {"backend": "reference", ... "events" omitted} | null,
           "speedup": engine.req_per_s / baseline.req_per_s | null
-        }, ...
+        },
+        # the 10^7-request config skips the (too-slow) single-engine and
+        # reference runs and instead carries a backend axis: "sharded" is
+        # the segmented default, "sharded_dense" the legacy padded-dense
+        # solver (peak RSS recorded per backend, segmented gated <= 4 GB)
+        {"name": "poisson-10m-f1024", ..., "engine": null,
+         "sharded": {...}, "sharded_dense": {...},
+         "backend_speedup": segmented/dense req_per_s},
+        # solver-level Zipf microbench: the hot-drive skew regime where
+        # the dense (n_servers, longest_queue) pad blows up — tracks the
+        # skewed-workload speedup of the segmented solver
+        {"name": "lindley-zipf-1m", "kind": "solver", "n_servers": 128,
+         "zipf_s": 1.2, "segmented": {...}, "dense": {...},
+         "speedup": segmented/dense req_per_s}, ...
       ]
     }
 
-The ``v2`` shards axis measures ``ClusterEngine.run_sharded`` on the
+The shards axis measures ``ClusterEngine.run_sharded`` on the
 partitioned fast path: best of 3 reps in one subprocess (the placement
 table is memoized process-wide, matching how a resident service would
 run; ``cold_wall_s`` records the first cold rep for transparency).
+Every measurement entry names the solver ``backend`` that produced it
+(``classic``/``reference`` for the event-loop engines,
+:data:`repro.core.lindley.BACKENDS` members for sharded/solver runs).
 
 Both smoke gates are RELATIVE: they rerun the comparison on the current
 host and check the measured ratio against the committed one, failing on a
@@ -70,8 +87,9 @@ from pathlib import Path
 
 REPO = Path(__file__).resolve().parent.parent
 BENCH_PATH = REPO / "BENCH_engine.json"
-SCHEMA = "bench_engine/v2"
+SCHEMA = "bench_engine/v3"
 BENCH_SHARDS = 8                        # the headline shards-axis point
+RSS_CAP_10M_KB = 4 * 1024 * 1024       # 10^7-request peak-RSS gate (4 GB)
 
 # All configs run at utilization 0.95 — the SLA-knee operating point the
 # Fig. 12 throughput-under-SLA methodology probes, where queueing (and the
@@ -92,11 +110,27 @@ CONFIGS = [SMOKE] + [
     for fleet in (64, 256, 1024)
     for shape in ("poisson", "bursty")
     for n_req, label in ((100_000, "100k"), (1_000_000, "1m"))
+] + [
+    # 10^7 requests: sharded-only (the single event loop would take
+    # minutes), both Lindley backends, peak RSS gated <= 4 GB on the
+    # segmented default.  Excluded from --smoke / --smoke-shards.
+    {"name": "poisson-10m-f1024", "arrival": "poisson",
+     "n_requests_target": 10_000_000, "n_dscs": 1024, "n_cpu": 1024,
+     "utilization": 0.95, "hedge_budget_s": 0.08, "baseline": False,
+     "single_engine": False, "reps": 2,
+     "backends": ["segmented", "dense"]},
+    # solver-level Zipf skew: one hot server owns ~27% of 10^6 requests,
+    # so the dense pad allocates (128, ~270k) float64 blocks while the
+    # segmented solver stays O(n) — the skewed-workload speedup criterion
+    {"name": "lindley-zipf-1m", "kind": "solver",
+     "n_requests_target": 1_000_000, "n_servers": 128, "zipf_s": 1.2},
 ]
 
 
 def _run_one(cfg: dict, which: str) -> dict:
     """Run one config on one engine in-process; returns the measurement."""
+    if which == "solver":
+        return _run_solver(cfg)
     from repro.core.arrivals import make_arrivals
     from repro.core.latency import LatencyModel
     from repro.core.function import standard_pipeline
@@ -118,23 +152,25 @@ def _run_one(cfg: dict, which: str) -> dict:
         t0 = time.perf_counter()
         trace = eng.run_soa(pipes, arrivals=arrivals, duration_s=duration)
         wall = time.perf_counter() - t0
-        n, events = trace.n, trace.events
+        n, events, backend = trace.n, trace.events, "classic"
     elif which == "sharded":
         from repro.core.engine import ClusterEngine
         n_shards = int(cfg.get("n_shards", BENCH_SHARDS))
         processes = int(cfg.get("processes", 1))
+        backend = cfg.get("backend", "segmented")
         walls = []
-        for _ in range(3):              # best of 3; rep 1 is the cold one
+        for _ in range(int(cfg.get("reps", 3))):   # rep 1 is the cold one
             eng = ClusterEngine(n_dscs=cfg["n_dscs"], n_cpu=cfg["n_cpu"],
                                 hedge_budget_s=cfg["hedge_budget_s"], seed=0)
             t0 = time.perf_counter()
             trace = eng.run_sharded(pipes, arrivals=arrivals,
                                     duration_s=duration, n_shards=n_shards,
-                                    processes=processes)
+                                    processes=processes, backend=backend)
             walls.append(time.perf_counter() - t0)
         wall = min(walls)
         n, events = trace.n, trace.events
-        out = {"n_shards": n_shards, "processes": processes,
+        out = {"backend": backend, "n_shards": n_shards,
+               "processes": processes,
                "requests": n, "events": events, "wall_s": round(wall, 3),
                "cold_wall_s": round(walls[0], 3),
                "req_per_s": round(n / wall, 1),
@@ -149,13 +185,51 @@ def _run_one(cfg: dict, which: str) -> dict:
         t0 = time.perf_counter()
         res = eng.run(pipes, arrivals=arrivals, duration_s=duration)
         wall = time.perf_counter() - t0
-        n, events = len(res), None
-    out = {"requests": n, "wall_s": round(wall, 3),
+        n, events, backend = len(res), None, "reference"
+    out = {"backend": backend, "requests": n, "wall_s": round(wall, 3),
            "req_per_s": round(n / wall, 1),
            "peak_rss_kb": resource.getrusage(resource.RUSAGE_SELF).ru_maxrss}
     if events is not None:
         out["events"] = events
     return out
+
+
+def _run_solver(cfg: dict) -> dict:
+    """Zipf-skewed Lindley microbench: one solver backend, in-process.
+
+    Draws ``n`` requests over ``n_servers`` queues with Zipf(``zipf_s``)
+    popularity (the hot-drive regime: the top server owns a constant
+    fraction of the whole stream), then times ``solve_segments`` + the
+    vectorized depth-max.  Run per-backend in separate subprocesses so
+    peak RSS is attributable."""
+    import numpy as np
+    from repro.core import lindley
+
+    backend = cfg["backend"]
+    n = int(cfg["n_requests_target"])
+    nserv = int(cfg["n_servers"])
+    rng = np.random.default_rng(0)
+    ranks = np.arange(1, nserv + 1, dtype=np.float64)
+    p = ranks ** -float(cfg["zipf_s"])
+    p /= p.sum()
+    keys = np.sort(rng.choice(nserv, size=n, p=p))
+    t = np.sort(rng.uniform(0.0, n / 1e4, size=n))   # sorted per segment too
+    s = rng.uniform(1e-4, 2e-3, size=n)
+    seg = lindley.segment_fenceposts(keys, 0, nserv)
+    start = np.empty(n)
+    fin = np.empty(n)
+    walls = []
+    for _ in range(int(cfg.get("reps", 3))):
+        t0 = time.perf_counter()
+        lindley.solve_segments(seg, t, s, start, fin, backend=backend)
+        lindley.queue_depth_max(seg, start, t)
+        walls.append(time.perf_counter() - t0)
+    wall = min(walls)
+    return {"backend": backend, "requests": n, "n_servers": nserv,
+            "longest_queue": int(np.diff(seg).max()),
+            "wall_s": round(wall, 3), "cold_wall_s": round(walls[0], 3),
+            "req_per_s": round(n / wall, 1),
+            "peak_rss_kb": resource.getrusage(resource.RUSAGE_SELF).ru_maxrss}
 
 
 def _spawn(cfg: dict, which: str) -> dict:
@@ -301,23 +375,62 @@ def main(argv=None) -> int:
            "host": {"python": sys.version.split()[0],
                     "numpy": np.__version__},
            "configs": []}
+    fail = 0
     for cfg in CONFIGS:
+        row = {k: v for k, v in cfg.items()
+               if k not in ("baseline", "single_engine", "reps", "backends")}
+        if cfg.get("kind") == "solver":
+            for be in ("segmented", "dense"):
+                print(f"[{cfg['name']}] {be} solver ...", flush=True)
+                row[be] = _spawn({**cfg, "backend": be}, "solver")
+                print(f"  {row[be]['req_per_s']:>12,.0f} req/s   "
+                      f"({row[be]['wall_s']}s, "
+                      f"{row[be]['peak_rss_kb'] // 1024} MB, longest queue "
+                      f"{row[be]['longest_queue']:,})", flush=True)
+            row["speedup"] = round(row["segmented"]["req_per_s"]
+                                   / row["dense"]["req_per_s"], 2)
+            print(f"  skewed-workload speedup {row['speedup']}x "
+                  "(segmented vs dense)", flush=True)
+            out["configs"].append(row)
+            continue
+
         want_baseline = cfg.get("baseline", False) and not args.no_baseline
-        row = {k: v for k, v in cfg.items() if k != "baseline"}
-        print(f"[{cfg['name']}] optimized engine ...", flush=True)
-        row["engine"] = _spawn(cfg, "engine")
-        print(f"  {row['engine']['req_per_s']:>12,.0f} req/s   "
-              f"({row['engine']['wall_s']}s, "
-              f"{row['engine']['peak_rss_kb'] // 1024} MB)", flush=True)
-        print(f"[{cfg['name']}] sharded engine ({BENCH_SHARDS} shards) ...",
-              flush=True)
-        row["sharded"] = _spawn(cfg, "sharded")
-        row["sharded"]["speedup_vs_single"] = round(
-            row["sharded"]["req_per_s"] / row["engine"]["req_per_s"], 2)
-        print(f"  {row['sharded']['req_per_s']:>12,.0f} req/s   "
-              f"(best of 3, cold {row['sharded']['cold_wall_s']}s) "
-              f"{row['sharded']['speedup_vs_single']}x vs single",
-              flush=True)
+        if cfg.get("single_engine", True):
+            print(f"[{cfg['name']}] optimized engine ...", flush=True)
+            row["engine"] = _spawn(cfg, "engine")
+            print(f"  {row['engine']['req_per_s']:>12,.0f} req/s   "
+                  f"({row['engine']['wall_s']}s, "
+                  f"{row['engine']['peak_rss_kb'] // 1024} MB)", flush=True)
+        else:
+            row["engine"] = None
+        for i, be in enumerate(cfg.get("backends", ["segmented"])):
+            key = "sharded" if i == 0 else f"sharded_{be}"
+            print(f"[{cfg['name']}] sharded engine ({BENCH_SHARDS} shards, "
+                  f"{be}) ...", flush=True)
+            row[key] = _spawn({**cfg, "backend": be}, "sharded")
+            row[key]["speedup_vs_single"] = (
+                round(row[key]["req_per_s"] / row["engine"]["req_per_s"], 2)
+                if row["engine"] else None)
+            vs = row[key]["speedup_vs_single"]
+            print(f"  {row[key]['req_per_s']:>12,.0f} req/s   "
+                  f"(cold {row[key]['cold_wall_s']}s, "
+                  f"{row[key]['peak_rss_kb'] // 1024} MB)"
+                  + (f" {vs}x vs single" if vs is not None else ""),
+                  flush=True)
+        if len(cfg.get("backends", ["segmented"])) > 1:
+            row["backend_speedup"] = round(
+                row["sharded"]["req_per_s"]
+                / row[f"sharded_{cfg['backends'][1]}"]["req_per_s"], 2)
+        if cfg["n_requests_target"] >= 10_000_000:
+            rss = row["sharded"]["peak_rss_kb"]
+            if rss > RSS_CAP_10M_KB:
+                print(f"FAIL: {cfg['name']} segmented peak RSS "
+                      f"{rss // 1024} MB exceeds the "
+                      f"{RSS_CAP_10M_KB // 1024} MB cap")
+                fail = 1
+            else:
+                print(f"  RSS gate OK: {rss // 1024} MB <= "
+                      f"{RSS_CAP_10M_KB // 1024} MB")
         if want_baseline:
             print(f"[{cfg['name']}] frozen pre-PR2 baseline ...", flush=True)
             row["baseline"] = _spawn(cfg, "baseline")
@@ -332,7 +445,7 @@ def main(argv=None) -> int:
 
     Path(args.out).write_text(json.dumps(out, indent=2) + "\n")
     print(f"wrote {args.out}")
-    return 0
+    return fail
 
 
 if __name__ == "__main__":

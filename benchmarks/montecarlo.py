@@ -49,13 +49,16 @@ def ci95(values: Sequence[float]) -> Tuple[float, Optional[float]]:
     return mean, 1.96 * math.sqrt(var / n)
 
 
-def _run_one_seed(seed: int, only: str, smoke: bool) -> List[dict]:
+def _run_one_seed(seed: int, only: str, smoke: bool,
+                  backend: str = "") -> List[dict]:
     cmd = [sys.executable, "-m", "benchmarks.run", "--json",
            "--seed", str(seed)]
     if only:
         cmd += ["--only", only]
     if smoke:
         cmd += ["--smoke"]
+    if backend:
+        cmd += ["--backend", backend]
     env = dict(os.environ)
     env["PYTHONPATH"] = os.pathsep.join(
         p for p in (os.path.join(REPO, "src"), REPO,
@@ -110,6 +113,10 @@ def main(argv=None) -> None:
                     help="CI-sized fast path for every figure")
     ap.add_argument("--jobs", type=int, default=1,
                     help="seed subprocesses to run concurrently")
+    ap.add_argument("--backend", default="",
+                    choices=("", "segmented", "pallas", "dense"),
+                    help="forwarded to benchmarks.run --backend (Lindley "
+                         "solver for sharded sweeps; default unchanged)")
     ap.add_argument("--json", default="", metavar="PATH",
                     help="write the figures/v2 envelope here instead of "
                          "stdout CSV")
@@ -122,9 +129,11 @@ def main(argv=None) -> None:
         from concurrent.futures import ThreadPoolExecutor
         with ThreadPoolExecutor(max_workers=args.jobs) as pool:
             per_seed = list(pool.map(
-                lambda s: _run_one_seed(s, args.only, args.smoke), seeds))
+                lambda s: _run_one_seed(s, args.only, args.smoke,
+                                        args.backend), seeds))
     else:
-        per_seed = [_run_one_seed(s, args.only, args.smoke) for s in seeds]
+        per_seed = [_run_one_seed(s, args.only, args.smoke, args.backend)
+                    for s in seeds]
 
     rows = aggregate(per_seed)
     envelope = {"schema": "figures/v2", "seeds": args.seeds,

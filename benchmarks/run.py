@@ -66,6 +66,14 @@ def _kernel_micro():
     Bm = jax.random.normal(key, (1, 128, 1, 8)) * 0.3
     timed("ssd_scan", lambda: ops.ssd(xs, dt, A, Bm, Bm, chunk=32),
           ref.ssd_ref(xs, dt, A, Bm, Bm, chunk=32))
+    import numpy as np
+    from jax.experimental import enable_x64
+    rng = np.random.default_rng(3)
+    tq = np.sort(rng.uniform(0.0, 50.0, size=(64, 128)), axis=1)
+    sq = rng.uniform(1e-3, 2.0, size=(64, 128))
+    with enable_x64():
+        lref = ref.lindley_ref(jnp.asarray(tq), jnp.asarray(sq))
+    timed("lindley_scan", lambda: ops.lindley(tq, sq), lref)
     return rows
 
 
@@ -103,10 +111,16 @@ def main(argv=None) -> None:
     ap.add_argument("--seed", type=int, default=0,
                     help="simulation seed for every figure (montecarlo "
                          "fans one config across many seeds)")
+    ap.add_argument("--backend", default="segmented",
+                    choices=("segmented", "pallas", "dense"),
+                    help="Lindley solver backend for sharded figure "
+                         "sweeps (repro.core.lindley; all backends are "
+                         "bit-identical, default unchanged)")
     args = ap.parse_args(argv)
     if args.smoke:
         figures_mod.SMOKE = True
     figures_mod.SEED = args.seed
+    figures_mod.BACKEND = args.backend
     figures = [f for f in ALL_FIGURES
                if args.only.lower() in f.__name__.lower()]
     if args.list_figs:

@@ -438,21 +438,25 @@ def _placement(n_dscs: int, n: int) -> np.ndarray:
         start = 0 if arr is None else int(arr.size)
         size = max(n, 2 * start, 1024)
         sha1 = hashlib.sha1
-        # one buffer of 20-byte digests, reduced mod n_dscs by vectorized
-        # 160-bit Horner steps: acc < n_dscs <= 2^31 keeps the uint64
-        # intermediate (acc << 32) + word exact, so the result is
-        # bit-identical to int.from_bytes(digest, "big") % n_dscs
-        buf = b"".join([sha1(b"req-%d" % i).digest()
-                        for i in range(start, size)])
-        words = np.frombuffer(buf, dtype=">u4").reshape(-1, 5).astype(np.uint64)
-        nd = np.uint64(n_dscs)
-        acc = words[:, 0] % nd
-        for j in range(1, 5):
-            acc = ((acc << np.uint64(32)) + words[:, j]) % nd
         grown = np.empty(size, dtype=np.int32)
         if start:
             grown[:start] = arr
-        grown[start:] = acc
+        nd = np.uint64(n_dscs)
+        # digests are joined and Horner-reduced in bounded chunks so the
+        # transient digest buffer stays a few MB at any request count;
+        # acc < n_dscs <= 2^31 keeps the uint64 intermediate
+        # (acc << 32) + word exact, so the result is bit-identical to
+        # int.from_bytes(digest, "big") % n_dscs
+        for c0 in range(start, size, _CHUNK):
+            c1 = min(c0 + _CHUNK, size)
+            buf = b"".join([sha1(b"req-%d" % i).digest()
+                            for i in range(c0, c1)])
+            words = np.frombuffer(buf, dtype=">u4").reshape(-1, 5) \
+                .astype(np.uint64)
+            acc = words[:, 0] % nd
+            for j in range(1, 5):
+                acc = ((acc << np.uint64(32)) + words[:, j]) % nd
+            grown[c0:c1] = acc
         _PLACEMENT_CACHE[n_dscs] = arr = grown
     return arr[:n]
 
@@ -2256,7 +2260,8 @@ class ClusterEngine:
                     processes: Optional[int] = None,
                     timeout_s: Optional[float] = None,
                     epoch_count: int = 64,
-                    mailbox_capacity: Optional[int] = None) -> EngineTrace:
+                    mailbox_capacity: Optional[int] = None,
+                    backend: str = "segmented") -> EngineTrace:
         """Run the fleet sharded by drive partition across workers.
 
         ``n_shards=1`` runs the classic event loop — byte-for-byte the
@@ -2270,7 +2275,11 @@ class ClusterEngine:
         ``processes=1`` runs the shards serially in-process with
         identical results).  ``epoch_count`` and ``mailbox_capacity``
         tune the bounded cross-shard mailbox.  Multi-tenant runs are not
-        supported sharded — use ``n_shards=1``.
+        supported sharded — use ``n_shards=1``.  ``backend`` selects the
+        fast path's Lindley solver (``segmented``/``pallas``/``dense``,
+        see :mod:`repro.core.lindley` — all bit-identical; ``n_shards=1``
+        and the shard-isolated fallback run the classic event loop and
+        ignore it).
         """
         if n_shards == 1:
             return self.run_soa(pipelines, arrivals=arrivals,
@@ -2281,7 +2290,8 @@ class ClusterEngine:
                                duration_s=duration_s, times=times,
                                n_shards=n_shards, processes=processes,
                                timeout_s=timeout_s, epoch_count=epoch_count,
-                               mailbox_capacity=mailbox_capacity)
+                               mailbox_capacity=mailbox_capacity,
+                               backend=backend)
 
     # -- telemetry -----------------------------------------------------------
     def queue_stats(self) -> Dict[str, Dict[str, float]]:

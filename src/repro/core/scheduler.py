@@ -129,7 +129,8 @@ class ClusterSim:
                     rps: Optional[float] = None, duration_s: float = 120.0,
                     arrivals: Optional[ArrivalProcess] = None,
                     n_shards: int = 1, processes: Optional[int] = None,
-                    timeout_s: Optional[float] = None) -> EngineTrace:
+                    timeout_s: Optional[float] = None,
+                    backend: str = "segmented") -> EngineTrace:
         """Simulate the same offered load sharded by drive partition.
 
         ``n_shards=1`` is the classic event loop (identical to ``run``,
@@ -140,7 +141,8 @@ class ClusterSim:
         :mod:`repro.core.sharding`; see
         :meth:`ClusterEngine.run_sharded`.  ``queue_stats``,
         ``power_stats``, ``fault_stats`` and ``tier_stats`` all report
-        the merged fleet view afterwards.
+        the merged fleet view afterwards.  ``backend`` selects the fast
+        path's Lindley solver (:mod:`repro.core.lindley`).
         """
         if arrivals is None:
             if rps is None:
@@ -153,7 +155,8 @@ class ClusterSim:
                                        duration_s=duration_s,
                                        n_shards=n_shards,
                                        processes=processes,
-                                       timeout_s=timeout_s)
+                                       timeout_s=timeout_s,
+                                       backend=backend)
 
     def queue_stats(self):
         """Queue-depth telemetry from the most recent ``run``."""

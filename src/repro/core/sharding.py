@@ -61,6 +61,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core import lindley
 from repro.core.faults import merge_fault_stats
 from repro.core.function import Pipeline, is_acceleratable
 from repro.core.platforms import CPU_FALLBACK_PLATFORM, DSCS_PLATFORM
@@ -247,26 +248,41 @@ def _build_tables(engine, pipelines: Sequence[Pipeline],
     CPU-copy tails.  The classic engine consumes the identical stream in
     event order instead of request order — on a single drive with no
     hedging the orders coincide and the service columns are bit-equal.
+
+    The uniform stream is consumed in bounded chunks (sequential
+    ``Generator.uniform`` calls concatenate to the same stream as one
+    call, pinned by a test) so the erfinv/exp temporaries never
+    materialize at full 2n length — at 10^7 requests that alone drops
+    ~0.6 GB of transient peak.
     """
     n = int(times.size)
     nd, nc = engine.n_dscs, engine.n_cpu
     rng = np.random.default_rng(np.random.SeedSequence(engine.seed).spawn(2)[1])
     picks = (rng.integers(len(pipelines), size=n) if n
              else np.empty(0, dtype=np.int64))
-    u = rng.uniform(size=2 * n)
-    np.clip(u, 1e-4, 1.0 - 1e-4, out=u)
-    z = math.sqrt(2.0) * _erfinv_vec(2.0 * u - 1.0)
-    tr = np.exp(engine.lm.params.read_sigma * z)
-    tw = np.exp(engine.lm.params.write_sigma * z)
     sampler = engine._sampler
     coef_d = np.array([sampler.coef(p.workload, DSCS_PLATFORM)
                        for p in pipelines])
     coef_c = np.array([sampler.coef(p.workload, CPU_FALLBACK_PLATFORM)
                        for p in pipelines])
-    svc_d = (coef_d[picks, 0] + coef_d[picks, 1] * tr[:n]
-             + coef_d[picks, 2] * tw[:n])
-    svc_c = (coef_c[picks, 0] + coef_c[picks, 1] * tr[n:]
-             + coef_c[picks, 2] * tw[n:])
+    rs, ws = engine.lm.params.read_sigma, engine.lm.params.write_sigma
+    chunk = 1 << 20
+
+    def _service(coef: np.ndarray) -> np.ndarray:
+        # consumes the next n uniforms; element-wise math is unchanged,
+        # so chunking is invisible to the output bits
+        out = np.empty(n)
+        for a in range(0, n, chunk):
+            u = rng.uniform(size=min(chunk, n - a))
+            np.clip(u, 1e-4, 1.0 - 1e-4, out=u)
+            z = math.sqrt(2.0) * _erfinv_vec(2.0 * u - 1.0)
+            pk = picks[a:a + u.size]
+            out[a:a + u.size] = (coef[pk, 0] + coef[pk, 1] * np.exp(rs * z)
+                                 + coef[pk, 2] * np.exp(ws * z))
+        return out
+
+    svc_d = _service(coef_d)
+    svc_c = _service(coef_c)
     accel_pipe = np.array([nd > 0 and is_acceleratable(p) for p in pipelines],
                           dtype=bool)
     from repro.core.engine import _placement
@@ -312,39 +328,26 @@ def _queue_depth_max(start: np.ndarray, t: np.ndarray) -> int:
 
 
 def _grouped_fcfs(keys: np.ndarray, lo: int, hi: int, t: np.ndarray,
-                  s: np.ndarray, start: np.ndarray, fin: np.ndarray
+                  s: np.ndarray, start: np.ndarray, fin: np.ndarray,
+                  backend: str = "segmented"
                   ) -> Tuple[List[float], List[float], List[int]]:
     """Solve every server's FCFS queue for rows sorted by ``keys``
     (server ids in ``[lo, hi)``): `_fcfs_segment` batched over all
-    servers at once through a zero-padded ``(n_servers, longest_queue)``
-    layout (pads sit after each row's data, so the prefix scans never
-    see them).  Fills ``start``/``fin`` in place and returns per-server
-    (busy_s, queue-area, max-depth) lists."""
+    servers at once through :mod:`repro.core.lindley` (length-bucketed
+    segmented scan by default; ``backend`` selects the Pallas kernel or
+    the legacy padded-dense layout — all bit-identical).  Fills
+    ``start``/``fin`` in place and returns per-server (busy_s,
+    queue-area, max-depth) lists."""
     nserv = hi - lo
     if not t.size:
         return [0.0] * nserv, [0.0] * nserv, [0] * nserv
-    seg = np.searchsorted(keys, np.arange(lo, hi + 1))
+    seg = lindley.segment_fenceposts(keys, lo, hi)
+    lindley.solve_segments(seg, t, s, start, fin, backend=backend)
     lens = np.diff(seg)
     rows = np.repeat(np.arange(nserv), lens)
-    pos = np.arange(t.size) - np.repeat(seg[:-1], lens)
-    shape = (nserv, int(lens.max()))
-    T = np.zeros(shape)
-    S = np.zeros(shape)
-    T[rows, pos] = t
-    S[rows, pos] = s
-    C = np.cumsum(S, axis=1)
-    prev = C - S
-    M = np.maximum.accumulate(T - prev, axis=1)
-    st = np.maximum(T, M + prev)[rows, pos]
-    start[:] = st
-    fin[:] = st + s
     busy = np.bincount(rows, weights=s, minlength=nserv).tolist()
-    area = np.bincount(rows, weights=st - t, minlength=nserv).tolist()
-    maxd: List[int] = [0] * nserv
-    for j in range(nserv):
-        a, b = int(seg[j]), int(seg[j + 1])
-        if a != b:
-            maxd[j] = _queue_depth_max(start[a:b], t[a:b])
+    area = np.bincount(rows, weights=start - t, minlength=nserv).tolist()
+    maxd = lindley.queue_depth_max(seg, start, t)
     return busy, area, maxd
 
 
@@ -355,12 +358,27 @@ def _grouped_fcfs(keys: np.ndarray, lo: int, hi: int, t: np.ndarray,
 _FORK_STATE: Optional[dict] = None
 
 
-def _map_shards(fn, items, processes: int):
+def _iter_shards(fn, items, processes: int):
+    """Yield ``fn(item)`` results in item order, lazily.
+
+    Serial execution runs one shard at a time; the fork pool streams
+    results back via ``imap`` (order-preserving).  Either way the caller
+    can merge-and-free each shard's arrays while later shards are still
+    being solved, so parent peak RSS holds one shard's result set, not
+    the whole run's.
+    """
     if processes <= 1:
-        return [fn(x) for x in items]
+        for x in items:
+            yield fn(x)
+        return
     ctx = mp.get_context("fork")
     with ctx.Pool(min(processes, len(items))) as pool:
-        return pool.map(fn, items)
+        for res in pool.imap(fn, items):
+            yield res
+
+
+def _map_shards(fn, items, processes: int):
+    return list(_iter_shards(fn, items, processes))
 
 
 # -- partitioned fast path ---------------------------------------------------
@@ -379,7 +397,8 @@ def _drive_phase(s: int) -> dict:
     start = np.empty_like(t)
     fin = np.empty_like(t)
     busy, area, maxd = _grouped_fcfs(st["tab"]["acc_drive"][a0:a1], lo, hi,
-                                     t, sv, start, fin)
+                                     t, sv, start, fin,
+                                     backend=st["backend"])
 
     # hedge decisions are a pure function of the drive-side wait (the
     # classic engine fires the hedge timer when the copy is still queued
@@ -439,14 +458,16 @@ def _cpu_phase(args) -> dict:
     sv = svc_c[rids]
     start = np.empty_like(disp)
     fin = np.empty_like(disp)
-    busy, area, maxd = _grouped_fcfs(node, clo, chi, disp, sv, start, fin)
+    busy, area, maxd = _grouped_fcfs(node, clo, chi, disp, sv, start, fin,
+                                     backend=st["backend"])
     return {"rids": rids, "start": start, "fin": fin, "node": node,
             "busy": busy, "area": area, "maxd": maxd}
 
 
 def _run_partitioned_pure(engine, pipelines, times, plan: ShardPlan,
                           processes: int, epoch_count: int,
-                          mailbox_capacity: Optional[int]):
+                          mailbox_capacity: Optional[int],
+                          backend: str = "segmented"):
     from repro.core.engine import EngineTrace
     global _FORK_STATE
     n = int(times.size)
@@ -457,22 +478,12 @@ def _run_partitioned_pure(engine, pipelines, times, plan: ShardPlan,
     horizon_est = float(times[-1]) + (hedge or 0.0) + 1e-9 if n else 1.0
     _FORK_STATE = {"plan": plan, "times": times, "tab": tab, "hedge": hedge,
                    "epoch_s": horizon_est / epoch_count,
-                   "epoch_count": epoch_count}
-    try:
-        drive_res = _map_shards(_drive_phase, list(range(k)), processes)
-        mailbox = ShardMailbox(
-            k, mailbox_capacity if mailbox_capacity is not None
-            else max(65536, 2 * n))
-        for s, res in enumerate(drive_res):
-            for dst, ep, rids, disp, node in res["batches"]:
-                mailbox.post(s, dst, ep, rids, disp, node)
-        cpu_res = _map_shards(_cpu_phase,
-                              [(s, mailbox.drain(s)) for s in range(k)],
-                              processes)
-    finally:
-        _FORK_STATE = None
+                   "epoch_count": epoch_count, "backend": backend}
 
-    # -- merge ----------------------------------------------------------------
+    # -- solve + streaming merge ---------------------------------------------
+    # Each shard's result is merged into the full-length columns and
+    # freed as soon as it lands (results arrive in shard order), so the
+    # parent never holds every shard's arrays at once.
     nan = math.nan
     d_start = np.full(n, nan)
     d_fin = np.full(n, nan)
@@ -486,19 +497,30 @@ def _run_partitioned_pure(engine, pipelines, times, plan: ShardPlan,
     c_area_l: List[float] = []
     c_maxd_l: List[int] = []
     n_hedged = 0
-    for res in drive_res:
-        d_start[res["rids"]] = res["start"]
-        d_fin[res["rids"]] = res["fin"]
-        d_busy_l += res["busy"]
-        d_area_l += res["area"]
-        d_maxd_l += res["maxd"]
-        n_hedged += res["n_hedged"]
-    for res in cpu_res:
-        c_start[res["rids"]] = res["start"]
-        c_fin[res["rids"]] = res["fin"]
-        c_busy_l += res["busy"]
-        c_area_l += res["area"]
-        c_maxd_l += res["maxd"]
+    mailbox = ShardMailbox(
+        k, mailbox_capacity if mailbox_capacity is not None
+        else max(65536, 2 * n))
+    try:
+        for s, res in enumerate(_iter_shards(_drive_phase, list(range(k)),
+                                             processes)):
+            d_start[res["rids"]] = res["start"]
+            d_fin[res["rids"]] = res["fin"]
+            d_busy_l += res["busy"]
+            d_area_l += res["area"]
+            d_maxd_l += res["maxd"]
+            n_hedged += res["n_hedged"]
+            for dst, ep, rids, disp, node in res["batches"]:
+                mailbox.post(s, dst, ep, rids, disp, node)
+        for res in _iter_shards(_cpu_phase,
+                                [(s, mailbox.drain(s)) for s in range(k)],
+                                processes):
+            c_start[res["rids"]] = res["start"]
+            c_fin[res["rids"]] = res["fin"]
+            c_busy_l += res["busy"]
+            c_area_l += res["area"]
+            c_maxd_l += res["maxd"]
+    finally:
+        _FORK_STATE = None
     accel, drive = tab["accel"], tab["drive"]
     hedged[accel & ~np.isnan(c_fin)] = True
 
@@ -698,16 +720,26 @@ def run_partitioned(engine, pipelines: Optional[Sequence[Pipeline]], *,
                     processes: Optional[int] = None,
                     timeout_s: Optional[float] = None,
                     epoch_count: int = 64,
-                    mailbox_capacity: Optional[int] = None):
+                    mailbox_capacity: Optional[int] = None,
+                    backend: str = "segmented"):
     """Execute one sharded run (``n_shards >= 2``); see the module
     docstring for the two paths.  Called via
-    :meth:`ClusterEngine.run_sharded`."""
+    :meth:`ClusterEngine.run_sharded`.
+
+    ``backend`` picks the Lindley solver on the partitioned fast path
+    (:data:`repro.core.lindley.BACKENDS`: ``segmented``/``pallas``/
+    ``dense`` — all bit-identical); the shard-isolated fallback runs the
+    classic event loop and ignores it.
+    """
     if pipelines is None or not len(pipelines):
         raise ValueError("run_sharded needs a non-empty pipelines list "
                          "(tenants= is not supported sharded; run them "
                          "with n_shards=1)")
     if epoch_count < 1:
         raise ValueError("epoch_count must be >= 1")
+    if backend not in lindley.BACKENDS:
+        raise ValueError(f"backend must be one of {lindley.BACKENDS}, "
+                         f"got {backend!r}")
     plan = ShardPlan.build(engine.n_dscs, engine.n_cpu, n_shards, engine.seed)
     if processes is None:
         processes = min(n_shards, os.cpu_count() or 1)
@@ -728,4 +760,4 @@ def run_partitioned(engine, pipelines: Optional[Sequence[Pipeline]], *,
         return _run_shard_isolated(engine, pipelines, times, plan,
                                    processes, timeout_s)
     return _run_partitioned_pure(engine, pipelines, times, plan, processes,
-                                 epoch_count, mailbox_capacity)
+                                 epoch_count, mailbox_capacity, backend)

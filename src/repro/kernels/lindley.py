@@ -1,0 +1,80 @@
+"""Segmented Lindley recurrence as a Pallas TPU kernel.
+
+Solves a batch of independent FCFS queues: for each row (queue) with
+arrivals ``t`` and service demands ``s`` along the depth axis, the
+service start is ``start_d = max(t_d, m_d + prev_d)`` with
+``prev_d = cumsum(s)_d - s_d`` and ``m_d`` the running max of
+``t - prev``.  Rows ride the lane dimension, the depth axis is scanned
+sequentially across grid blocks with a grid-carried fp64 VMEM state of
+``(running cumsum, running max)`` per lane.
+
+The step performs the *same* float64 operations in the same order as
+the numpy backend in :mod:`repro.core.lindley` (including ``prev``
+recomputed as ``c - s`` rather than carried directly), so interpret-mode
+output is bit-identical to numpy — pinned in ``tests/test_kernels.py``.
+Zero-padded tail blocks are harmless: position ``d`` only depends on
+positions ``<= d`` of the same row.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import compiler_params
+
+
+def _lindley_kernel(t_ref, s_ref, o_ref, st_ref, *, bd: int):
+    it = pl.program_id(1)
+
+    @pl.when(it == 0)
+    def _init():
+        st_ref[0, :] = jnp.zeros_like(st_ref[0, :])       # running cumsum
+        st_ref[1, :] = jnp.full_like(st_ref[1, :], -jnp.inf)  # running max
+
+    def step(d, carry):
+        c, m = carry
+        s = s_ref[d, :]
+        t = t_ref[d, :]
+        c = c + s
+        prev = c - s              # matches numpy's C - S, not c_{d-1}
+        m = jnp.maximum(m, t - prev)
+        o_ref[d, :] = jnp.maximum(t, m + prev)
+        return c, m
+
+    c, m = jax.lax.fori_loop(0, bd, step, (st_ref[0, :], st_ref[1, :]))
+    st_ref[0, :] = c
+    st_ref[1, :] = m
+
+
+@functools.partial(jax.jit, static_argnames=("br", "bd", "interpret"))
+def lindley_scan(t: jax.Array, s: jax.Array, *, br: int = 128,
+                 bd: int = 128, interpret: bool = False) -> jax.Array:
+    """t/s (R, W): R queues, depth W (zero pad past each queue's length)
+    -> service starts (R, W)."""
+    R, W = t.shape
+    br, bd = min(br, R), min(bd, W)
+    Rp = -(-R // br) * br
+    Wp = -(-W // bd) * bd
+    # transpose to (depth, rows): rows on lanes, depth scanned
+    tp = jnp.pad(t, ((0, Rp - R), (0, Wp - W))).T
+    sp = jnp.pad(s, ((0, Rp - R), (0, Wp - W))).T
+    blk = lambda ir, it: (it, ir)
+    out = pl.pallas_call(
+        functools.partial(_lindley_kernel, bd=bd),
+        grid=(Rp // br, Wp // bd),
+        in_specs=[
+            pl.BlockSpec((bd, br), blk),
+            pl.BlockSpec((bd, br), blk),
+        ],
+        out_specs=pl.BlockSpec((bd, br), blk),
+        out_shape=jax.ShapeDtypeStruct((Wp, Rp), t.dtype),
+        scratch_shapes=[pltpu.VMEM((2, br), t.dtype)],
+        compiler_params=compiler_params(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(tp, sp)
+    return out.T[:R, :W]

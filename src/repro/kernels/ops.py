@@ -14,6 +14,7 @@ from repro.kernels.vector_engine import (fused_affine_act, quantize_int8,
                                          dequantize_int8)
 from repro.kernels.rglru import rglru_scan
 from repro.kernels.ssd import ssd_scan
+from repro.kernels.lindley import lindley_scan
 
 
 def _interpret_default() -> bool:
@@ -81,3 +82,17 @@ def ssd(x, dt, A, Bm, Cm, *, chunk=128, interpret=None):
     return ssd_scan(x, dt, A, Bm, Cm, chunk=chunk,
                     interpret=_interpret_default()
                     if interpret is None else interpret)
+
+
+def lindley(t, s, *, br=128, bd=128, interpret=None):
+    """Batched FCFS service starts in float64 (queue-sim precision).
+
+    x64 is enabled only for this call — the engine's byte-identity
+    gates need exact fp64, but flipping the global default dtype would
+    leak into every other kernel and model.
+    """
+    from jax.experimental import enable_x64
+    with enable_x64():
+        return lindley_scan(t, s, br=br, bd=bd,
+                            interpret=_interpret_default()
+                            if interpret is None else interpret)

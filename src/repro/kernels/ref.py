@@ -64,3 +64,11 @@ def rglru_ref(x, gx, ga, log_a, h0):
 def ssd_ref(x, dt, A, Bm, Cm, *, chunk):
     """Chunked SSD via associative scan (models.layers.ssd_chunked)."""
     return L.ssd_chunked(x, dt, A, Bm, Cm, chunk=chunk)
+
+
+def lindley_ref(t, s):
+    """Batched FCFS Lindley starts: t/s (R, W) -> start (R, W)."""
+    c = jnp.cumsum(s, axis=1)
+    prev = c - s
+    m = jax.lax.cummax(t - prev, axis=1)
+    return jnp.maximum(t, m + prev)

@@ -103,6 +103,56 @@ def test_rglru_kernel(b, s, w):
                                rtol=1e-4, atol=1e-4)
 
 
+# Lindley tests run in the CI kernel-smoke step: keep them small and
+# NOT slow-marked.
+@pytest.mark.parametrize("r,w", [(3, 17), (128, 128), (200, 300), (1, 1)])
+def test_lindley_kernel_vs_ref(r, w):
+    rng = np.random.default_rng(11)
+    t = np.sort(rng.uniform(0.0, 100.0, size=(r, w)), axis=1)
+    s = rng.uniform(1e-3, 4.0, size=(r, w))
+    got = np.asarray(ops.lindley(t, s))
+    from jax.experimental import enable_x64
+    with enable_x64():
+        want = np.asarray(ref.lindley_ref(jnp.asarray(t), jnp.asarray(s)))
+    assert got.dtype == np.float64
+    np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-12)
+
+
+@pytest.mark.parametrize("seed", [0, 7])
+@pytest.mark.parametrize("nserv,n", [(6, 500), (1, 700), (40, 64)])
+def test_lindley_kernel_bit_equal_to_numpy_backend(seed, nserv, n):
+    """Interpret-mode Pallas output must be byte-for-byte the segmented
+    numpy backend (same fp64 ops in the same order) — the property that
+    lets ``backend='pallas'`` reuse the golden traces unchanged."""
+    from repro.core import lindley as core_lindley
+
+    rng = np.random.default_rng(seed)
+    keys = np.sort(rng.integers(0, nserv, size=n))
+    t = rng.uniform(0.0, 60.0, size=n)
+    seg = core_lindley.segment_fenceposts(keys, 0, nserv)
+    for j in range(nserv):
+        t[seg[j]:seg[j + 1]].sort()
+    s = rng.uniform(1e-3, 3.0, size=n)
+    out = {}
+    for backend in ("segmented", "pallas"):
+        start = np.empty(n)
+        fin = np.empty(n)
+        core_lindley.solve_segments(seg, t, s, start, fin, backend=backend)
+        out[backend] = (start.tobytes(), fin.tobytes())
+    assert out["segmented"] == out["pallas"]
+
+
+def test_lindley_x64_scoped_to_the_call():
+    """ops.lindley returns exact float64 without flipping the global x64
+    default for the rest of the process."""
+    t = np.array([[0.0, 0.5, 1.0]])
+    s = np.array([[1.0, 1.0, 1.0]])
+    got = np.asarray(ops.lindley(t, s))
+    assert got.dtype == np.float64
+    np.testing.assert_array_equal(got, np.array([[0.0, 1.0, 2.0]]))
+    assert jnp.asarray(1.5).dtype == jnp.float32
+
+
 @pytest.mark.parametrize("b,s,h,p,g,n,chunk", [
     (2, 128, 4, 32, 2, 16, 32), (1, 256, 2, 16, 1, 8, 64),
     (2, 64, 4, 16, 4, 16, 64)])

@@ -68,13 +68,15 @@ def make_config(seed: int) -> dict:
     }
 
 
-def run_cfg(cfg: dict, n_shards: int, processes: int = 1):
+def run_cfg(cfg: dict, n_shards: int, processes: int = 1,
+            backend: str = "segmented"):
     eng = ClusterEngine(n_dscs=cfg["n_dscs"], n_cpu=cfg["n_cpu"],
                         hedge_budget_s=cfg["hedge"], seed=cfg["seed"],
                         tier=cfg["tier"], faults=cfg["faults"])
     tr = eng.run_sharded(cfg["pipes"], arrivals=cfg["arrivals"],
                          duration_s=cfg["duration_s"], n_shards=n_shards,
-                         processes=processes, timeout_s=cfg["timeout_s"])
+                         processes=processes, timeout_s=cfg["timeout_s"],
+                         backend=backend)
     return eng, tr
 
 
@@ -121,6 +123,43 @@ def test_sharded_runs_are_shard_count_independent(seed):
                 assert fs["goodput"]["completed"] == completed
         assert t2.n == t4.n
         assert np.array_equal(t2.arrival, t4.arrival)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_lindley_backends_are_bit_identical(seed):
+    """The dense (legacy padded) and segmented (bucketed) Lindley
+    solvers must produce byte-identical traces, queue state and
+    telemetry on the partitioned fast path — backend choice is an
+    execution strategy, never a model change."""
+    cfg = {**make_config(seed), "tier": None, "faults": None,
+           "timeout_s": None}
+    es, ts = run_cfg(cfg, 2, backend="segmented")
+    assert es.last_shard_stats["path"] == "partitioned"
+    ed, td = run_cfg(cfg, 2, backend="dense")
+    assert_traces_identical(ts, td)
+    assert es._qstate == ed._qstate
+    assert es._pstate == ed._pstate
+    assert dict(es.telemetry.counters) == dict(ed.telemetry.counters)
+
+
+def test_pallas_backend_is_bit_identical():
+    """Interpret-mode Pallas solve of a whole sharded run matches the
+    segmented numpy backend byte-for-byte (small config: interpret mode
+    trades speed for exactness)."""
+    cfg = {**make_config(1), "tier": None, "faults": None,
+           "timeout_s": None, "duration_s": 1.0}
+    es, ts = run_cfg(cfg, 2, backend="segmented")
+    assert es.last_shard_stats["path"] == "partitioned"
+    ep, tp = run_cfg(cfg, 2, backend="pallas")
+    assert_traces_identical(ts, tp)
+    assert es._qstate == ep._qstate
+
+
+def test_unknown_backend_is_rejected():
+    cfg = {**make_config(0), "tier": None, "faults": None,
+           "timeout_s": None}
+    with pytest.raises(ValueError, match="backend"):
+        run_cfg(cfg, 2, backend="flat")
 
 
 @pytest.mark.parametrize("seed", [0, 3, 5, 8])
