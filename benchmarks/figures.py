@@ -2,8 +2,8 @@
 (name, value, derived) and is invoked by benchmarks.run.
 
 ``SMOKE`` (set by ``benchmarks.run --smoke``) shrinks the expensive
-simulation figures (fig12, fig18, fig20, fig21, fig22, fig23) to a
-CI-sized fast path with the same structure and acceptance ratios.
+simulation figures (fig12, fig18, fig20, fig21, fig22, fig23, fig24) to
+a CI-sized fast path with the same structure and acceptance ratios.
 ``SEED`` (set by ``benchmarks.run --seed``) is the simulation seed every
 figure draws from, so ``benchmarks.montecarlo`` can fan one figure
 config across many seeds and report ``mean +/- 95% CI``.
@@ -26,8 +26,10 @@ from repro.core.energy import energy_reduction_vs_baseline
 from repro.core.function import standard_pipeline
 from repro.core.latency import LatencyModel
 from repro.core.platforms import PLATFORMS
-from repro.core.scheduler import (ClusterSim, ExponentialBackoff, FaultPlan,
-                                  FixedRetry, NoRetry, RepairModel)
+from repro.core.scheduler import (Backpressure, Brownout, ClusterSim,
+                                  ExponentialBackoff, FaultPlan, FixedRetry,
+                                  NoRetry, OverloadControl, RepairModel,
+                                  ShedPolicy, TokenBucket)
 from repro.core.tenancy import (SpatialPartition, TenantSpec,
                                 WeightedTimeSlice, isolation_violation_rate,
                                 jain_index, tenant_reports)
@@ -601,6 +603,116 @@ def fig23_availability() -> List[Row]:
     return rows
 
 
+def fig24_overload() -> List[Row]:
+    """Beyond-paper overload study (ISSUE 10): goodput and SLA attainment
+    vs offered load at 1x-3x the saturation knee, naive vs protected.
+
+    Goodput here is the overload-control literature's definition — the
+    fraction of *offered* load answered within the SLA; a response that
+    limps in after the SLA (but before the client timeout) is wasted
+    work.  The fleet so far admits every arrival into unbounded FCFS
+    queues, so past the saturation knee every request queues for most of
+    its deadline and almost nothing finishes inside the SLA — the
+    metastable congestion collapse real serverless platforms prevent
+    with concurrency limits and throttling (arXiv 2501.09831).
+    ``ExponentialBackoff`` retries on injected drive faults and hedged
+    duplicates feed the storm.  Arms at each offered load:
+
+      * ``naive``     — PR-6 fleet: faults + unbudgeted exponential-backoff
+        retries + hedging, no overload control (baseline)
+      * ``protected`` — the same fleet behind the overload layer: token
+        bucket at 0.9x the knee, short bounded queues with
+        deadline-hopeless shedding, backpressure to the arrival source,
+        and brownout (hedging suspended under sustained overload)
+
+    The saturation knee is the offered rate where the clean fleet's
+    *median* latency crosses the SLA — the classic knee of the
+    latency-throughput curve, found by ``max_throughput`` with
+    ``sla_frac=0.5``.  The acceptance criterion (CI-gated by the fig24
+    smoke step) is the ``headline/goodput_retention`` row: at 1.5x the
+    knee the protected fleet must retain >= 2x the goodput of the naive
+    one (measured margin is ~6x; see docs/ARCHITECTURE.md)."""
+    if SMOKE:
+        dur, knee_dur, mults = 12.0, 8.0, (1.0, 1.5, 2.0)
+    else:
+        dur, knee_dur, mults = 40.0, 20.0, (1.0, 1.5, 2.0, 3.0)
+    n_srv, sla_s, timeout_s = 4, 0.15, 0.5
+    pipes = [standard_pipeline("asset_damage")]
+
+    # saturation knee of the clean fleet (no faults, no overload)
+    knee = ClusterSim(n_dscs=n_srv, n_cpu=n_srv, seed=SEED).max_throughput(
+        pipes, sla_s=sla_s, sla_frac=0.5, duration_s=knee_dur, hi=4096.0)
+
+    def plan() -> FaultPlan:
+        return FaultPlan(drive_mtbf_s=20.0, drive_mttr_s=4.0,
+                         retry=ExponentialBackoff(base_s=0.01, cap_s=0.5,
+                                                  max_attempts=8),
+                         retry_budget=None, detect_timeout_s=0.2)
+
+    def protection() -> OverloadControl:
+        return OverloadControl(
+            admission=TokenBucket(rate=0.9 * knee, burst=8.0),
+            shed=ShedPolicy(max_queue=3, hopeless=True),
+            backpressure=Backpressure(target_depth=1.0),
+            brownout=Brownout(on_depth=1.2, off_depth=0.4))
+
+    cache = {}
+
+    def run(arm: str, mult: float):
+        key = (arm, mult)
+        if key not in cache:
+            sim = ClusterSim(n_dscs=n_srv, n_cpu=n_srv, seed=SEED,
+                             hedge_budget_s=0.05, faults=plan(),
+                             overload=(protection() if arm == "protected"
+                                       else None))
+            tr = sim.run(pipes, arrivals=make_arrivals("poisson",
+                                                       mult * knee),
+                         duration_s=dur, timeout_s=timeout_s)
+            lat = np.array([r.latency for r in tr], dtype=float)
+            comp = lat[~np.isnan(lat)]
+            fs = sim.fault_stats()
+            cache[key] = {
+                "goodput": (float(np.count_nonzero(comp <= sla_s)) / len(tr)
+                            if tr else 0.0),
+                "completed": fs["goodput"]["goodput_frac"],
+                "rejected": fs["rejected"], "shed": fs["shed"],
+                "dead": fs["deadline_abandoned"],
+                "ov": sim.overload_stats(),
+            }
+        return cache[key]
+
+    rows: List[Row] = []
+    for mult in mults:
+        for arm in ("naive", "protected"):
+            st = run(arm, mult)
+            rows.append((f"fig24/load_{mult:g}x/{arm}/goodput_frac",
+                         st["goodput"],
+                         f"sla={sla_s}s knee={knee:.1f}rps "
+                         f"rejected={st['rejected']} shed={st['shed']}"))
+            rows.append((f"fig24/load_{mult:g}x/{arm}/completed_frac",
+                         st["completed"],
+                         f"finished before the {timeout_s}s client "
+                         f"timeout; deadline_abandoned={st['dead']}"))
+    ov = run("protected", 1.5)["ov"]
+    pb = min((f for _, f in ov["pushback"]["timeline"]),
+             default=ov["pushback"]["final"])
+    rows.append(("fig24/load_1.5x/protected/retries_denied",
+                 float(ov["retries_denied"]),
+                 "retry path consults admission state"))
+    rows.append(("fig24/load_1.5x/protected/hedges_suppressed",
+                 float(ov["hedges_suppressed"]),
+                 f"brownout_entered={ov['brownout']['entered']}"))
+    rows.append(("fig24/load_1.5x/protected/pushback_min", pb,
+                 "deepest client-side throttle factor over the run"))
+    naive = run("naive", 1.5)
+    prot = run("protected", 1.5)
+    rows.append(("fig24/headline/goodput_retention",
+                 _ratio(prot["goodput"], naive["goodput"]),
+                 "admission + shedding + brownout over naive fleet at "
+                 "1.5x knee; acceptance criterion: must be >= 2"))
+    return rows
+
+
 ALL_FIGURES = [
     fig04_breakdown, fig05_tail_cdf, fig07_dse_pareto, fig08_speedup,
     fig09_runtime_breakdown, fig10_energy, fig11_cost_efficiency,
@@ -608,4 +720,5 @@ ALL_FIGURES = [
     fig15_pcie_sensitivity, fig16_tail_latency, fig17_cold_start,
     fig18_arrival_scenarios, fig19_hedging_tail, fig20_autoscaling,
     fig21_tenant_fairness, fig22_tiered_storage, fig23_availability,
+    fig24_overload,
 ]

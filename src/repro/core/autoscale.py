@@ -342,7 +342,8 @@ def evaluate_policy(policy: AutoscalePolicy, pipelines: Sequence[Pipeline], *,
                     latency_model: Optional[LatencyModel] = None,
                     dscs_wake_s: float = 0.2, tier=None,
                     faults: Optional[FaultPlan] = None,
-                    timeout_s: Optional[float] = None) -> AutoscaleReport:
+                    timeout_s: Optional[float] = None,
+                    overload=None) -> AutoscaleReport:
     """Run ``policy`` over a fresh engine and score it.
 
     ``n_dscs``/``n_cpu`` are the provisioned maxima the policy scales
@@ -358,13 +359,18 @@ def evaluate_policy(policy: AutoscalePolicy, pipelines: Sequence[Pipeline], *,
     repair as a fail-stop, and those repair bytes are charged to the cost
     scorecard (``repair_gb``, priced in :func:`fleet_cost_usd`) — power
     cycling is no longer free.  ``timeout_s`` adds per-request deadlines;
-    abandoned requests never count as SLA-met.
+    abandoned requests never count as SLA-met.  ``overload`` attaches an
+    :class:`~repro.core.overload.OverloadControl`; rejected/shed requests
+    never count as SLA-met either, and the policy's ``observe`` sees the
+    per-epoch rejection and pushback signals on its
+    :class:`~repro.core.engine.FleetSnapshot`.
     """
     policy.reset()
     eng = ClusterEngine(n_dscs=n_dscs, n_cpu=n_cpu,
                         latency_model=latency_model,
                         hedge_budget_s=hedge_budget_s, seed=seed,
-                        dscs_wake_s=dscs_wake_s, tier=tier, faults=faults)
+                        dscs_wake_s=dscs_wake_s, tier=tier, faults=faults,
+                        overload=overload)
     trace = eng.run_soa(pipelines, arrivals=arrivals, duration_s=duration_s,
                         controller=policy, timeout_s=timeout_s)
     ps = eng.power_stats()

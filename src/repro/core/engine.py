@@ -131,6 +131,8 @@ from repro.core.faults import (CPU_CRASH, CPU_RECOVER, DRIVE_FAIL,
                                FaultPlan)
 from repro.core.function import Pipeline, is_acceleratable
 from repro.core.latency import LatencyModel, _erfinv
+from repro.core.overload import AdmitAll, OverloadControl, QueueThreshold, \
+    TokenBucket
 from repro.core.platforms import (CPU_FALLBACK_PLATFORM, DSCS_PLATFORM,
                                   PLATFORMS)
 from repro.core.tenancy import (FCFSRunToCompletion, SpatialPartition,
@@ -291,6 +293,13 @@ class FleetSnapshot:
     tenant_queue: Tuple[int, ...] = ()
     tenant_arrivals: Tuple[int, ...] = ()
     tenant_completions: Tuple[int, ...] = ()
+    # overload-control signals (zero/neutral without an OverloadControl):
+    # arrivals rejected / requests shed since the previous epoch, and the
+    # pushback factor currently applied to the arrival sources — so a
+    # policy can scale out on rejection pressure before queues even grow.
+    rejected: int = 0
+    shed: int = 0
+    pushback: float = 1.0
 
 
 @dataclass
@@ -473,7 +482,8 @@ class ClusterEngine:
                  dscs_wake_s: float = 0.2,
                  preempt_losers: bool = False,
                  tier: Optional[TierConfig] = None,
-                 faults: Optional[FaultPlan] = None):
+                 faults: Optional[FaultPlan] = None,
+                 overload: Optional[OverloadControl] = None):
         if n_cpu <= 0:
             raise ValueError("the fleet needs at least one CPU fallback node")
         self.n_dscs = n_dscs
@@ -503,6 +513,14 @@ class ClusterEngine:
         self.faults = faults
         if faults is not None:
             faults.validate()
+        # overload control (overload.py): admission, queue shedding,
+        # backpressure and brownout.  Every policy is a deterministic
+        # function of engine state — the layer draws no randomness, spawns
+        # no SeedSequence child, and None (or a config with every
+        # mechanism off) keeps the classic bit-exact path.
+        self.overload = overload
+        if overload is not None:
+            overload.validate()
         self._sampler = _ServiceSampler(self.lm)
         self._qstate: Optional[dict] = None
         self.last_shard_stats: Optional[dict] = None
@@ -510,6 +528,7 @@ class ClusterEngine:
         self._tstate: Optional[dict] = None
         self._tierstate: Optional[dict] = None
         self._fstate: Optional[dict] = None
+        self._ovstate: Optional[dict] = None
 
     def sample_bank(self, pipelines: Sequence[Pipeline]) -> SampleBank:
         """A :class:`SampleBank` for common-random-number runs."""
@@ -533,7 +552,8 @@ class ClusterEngine:
                 controller=None,
                 tenants: Optional[Sequence[TenantSpec]] = None,
                 scheduler=None,
-                timeout_s: Optional[float] = None) -> EngineTrace:
+                timeout_s: Optional[float] = None,
+                overload: Optional[OverloadControl] = None) -> EngineTrace:
         """The batched event loop; returns the run as an
         :class:`EngineTrace`.
 
@@ -571,6 +591,13 @@ class ClusterEngine:
         (per-tenant lane groups with proportionally inflated service).
         Per-tenant telemetry lands in :meth:`tenant_stats`.  The CPU
         fallback pool stays least-loaded/FCFS in every mode.
+
+        ``overload`` attaches the overload-control layer
+        (:class:`~repro.core.overload.OverloadControl`: admission control,
+        queue shedding, backpressure, brownout), overriding the engine-
+        level config for this run; telemetry lands in
+        :meth:`overload_stats`.  The layer is rng-free — ``None`` or a
+        fully-disabled config keeps the classic bit-exact event stream.
         """
         mt = tenants is not None
         sk = 0                          # 0 fcfs | 1 timeslice | 2 spatial
@@ -626,6 +653,7 @@ class ClusterEngine:
                 raise ValueError("the tiered data layer needs n_dscs >= 1")
         self._tierstate = None
         self._fstate = None
+        self._ovstate = None
 
         fp = self.faults
         fa = fp is not None
@@ -641,6 +669,20 @@ class ClusterEngine:
                 raise NotImplementedError(
                     "timeout_s deadlines compose with single-tenant "
                     "runs only")
+
+        # overload control: a run_soa override falls back to the engine-
+        # level config (like tier/faults).  Enabled means at least one of
+        # admission / shedding / backpressure / brownout is active; the
+        # layer is rng-free, so no SeedSequence child is spawned either way
+        ov = overload if overload is not None else self.overload
+        ov_on = ov is not None and ov.enabled
+        if ov_on:
+            ov.validate()
+            if sk != 0:
+                raise NotImplementedError(
+                    "overload control composes with the FCFS drive "
+                    "scheduler only; queue shedding under time-sliced or "
+                    "partitioned DSAs is future work")
 
         ss = np.random.SeedSequence(self.seed)
         # SeedSequence children are keyed by index, so earlier children are
@@ -871,6 +913,7 @@ class ClusterEngine:
             c_on_ivals: List[Tuple[float, float]] = []
             d_on_ivals: List[Tuple[float, float]] = []
             ep_last_ai = ep_last_done = 0
+            ep_last_rej = ep_last_shed = 0
             if mt:
                 ep_last_ta = [0] * K
                 ep_last_tc = [0] * K
@@ -925,11 +968,223 @@ class ClusterEngine:
             ftl = ()
             det_s = None
         fi = 0
-        dead_l = (bytearray(n) if (fa or timeout_s is not None) else None)
+        dead_l = (bytearray(n) if (fa or timeout_s is not None or ov_on)
+                  else None)
         t_dead = 0                      # deadline abandonments
         x_ev = 0                        # fault/retry/repair/deadline events
         dl_dq: deque = deque()          # (deadline, rid): FIFO, const offset
         det_dq: deque = deque()         # (detect time, rid): FIFO likewise
+
+        # -- overload-control state (overload.py; inert without a config).
+        # Every mechanism is a deterministic function of engine state —
+        # token-bucket refill, queue-depth thresholds, head-age CoDel, the
+        # pushback accumulator — so no random draw is taken and the
+        # seed-derived streams never shift with the layer on or off.
+        ov_admitted = ov_rej = ov_rej_push = ov_rej_adm = 0
+        ov_shed = ov_cc = ov_retry_deny = ov_hedge_sup = 0
+        ov_epochs = bro_entered = bro_ep_act = 0
+        push_f = 1.0                    # current pushback factor
+        bro_active = False              # brownout engaged
+        ov_t = INF                      # next overload control epoch
+        ov_gate_on = False              # arrival/retry admission gate live
+        ov_maxq = None                  # bounded-queue shed threshold
+        ov_incoming = False             # overflow victim: incoming copy
+        ov_disp = False                 # dispatch-time sheds (hopeless/CoDel)
+        if ov_on:
+            adm = ov.admission
+            if isinstance(adm, AdmitAll):
+                adm = None              # the unconditional baseline
+            shp = (ov.shed if (ov.shed is not None and ov.shed.enabled)
+                   else None)
+            bp = ov.backpressure
+            bro = ov.brownout
+            ov_ep_s = ov.epoch_s
+            if bp is not None or bro is not None:
+                ov_t = ov_ep_s          # epochs only drive those two
+            ov_gate_on = adm is not None or bp is not None
+            ov_adm_cls = [0, 0]; ov_rej_cls = [0, 0]; ov_shed_cls = [0, 0]
+            ov_shed_by = [0, 0, 0]      # bounded / hopeless / codel
+            push_acc = 0.0              # deterministic thinning accumulator
+            push_tl: List[Tuple[float, float]] = []
+            bro_above = 0               # consecutive epochs above on_depth
+            bro_since = 0.0
+            bro_ivals: List[Tuple[float, float]] = []
+            K_ov = K if mt else 1
+            if mt:
+                ov_ten_adm = [0] * K; ov_ten_rej = [0] * K
+                ov_ten_shed = [0] * K
+            tb_on = isinstance(adm, TokenBucket)
+            if tb_on:
+                # buckets flattened [class][tenant], accel rows first; a
+                # tenant's bucket is sized to its weight share so a greedy
+                # tenant exhausts only its own allocation
+                n_cls = 2 if adm.per_class else 1
+                if mt:
+                    wsum = sum(t2.weight for t2 in tenants)
+                    shares = [t2.weight / wsum for t2 in tenants]
+                else:
+                    shares = [1.0]
+                tb_rate = [adm.rate * s2 for s2 in shares] * n_cls
+                tb_cap = [max(1.0, adm.burst * s2)
+                          for s2 in shares] * n_cls
+                tb_tok = list(tb_cap)   # buckets start full
+                tb_last = [0.0] * (n_cls * K_ov)
+            qt_on = isinstance(adm, QueueThreshold)
+            if shp is not None:
+                ov_maxq = shp.max_queue
+                ov_incoming = shp.drop == "incoming"
+                shp_hope = shp.hopeless and timeout_s is not None
+                codel_t = shp.codel_target_s
+                codel_i = shp.codel_interval_s
+                ov_disp = shp_hope or codel_t is not None
+                if codel_t is not None:
+                    # per-server time the head age first exceeded target
+                    codel_d = [-1.0] * nd
+                    codel_c = [-1.0] * nc
+
+            def ov_admit(rid2: int, t2: float) -> int:
+                """The arrival/retry admission gate: 0 admit, 1 rejected
+                by pushback (client-side throttling), 2 rejected by the
+                admission policy."""
+                nonlocal push_acc
+                if push_f < 1.0:
+                    # thin to exactly push_f of offered arrivals: the
+                    # accumulator passes a request each time it crosses 1
+                    push_acc += push_f
+                    if push_acc >= 1.0:
+                        push_acc -= 1.0
+                    else:
+                        return 1
+                if tb_on:
+                    idx = ((ten_l[rid2] if mt else 0)
+                           + (0 if (n_cls == 1 or accel_l[rid2])
+                              else K_ov))
+                    tok = tb_tok[idx] + (t2 - tb_last[idx]) * tb_rate[idx]
+                    cap = tb_cap[idx]
+                    if tok > cap:
+                        tok = cap
+                    tb_last[idx] = t2
+                    if tok >= 1.0:
+                        tb_tok[idx] = tok - 1.0
+                        return 0
+                    tb_tok[idx] = tok
+                    return 2
+                if qt_on:
+                    active = n_d_on + n_c_active
+                    if active <= 0:
+                        return 2
+                    mq = adm.max_queue_per_server
+                    if mq is not None and \
+                            sum(d_qd) + sum(c_qd) > mq * active:
+                        return 2
+                    mu = adm.max_utilization
+                    if mu is not None:
+                        busy = sum(d_busy) + sum(c_busy)
+                        if dyn:
+                            busy -= n_waking
+                        if busy > mu * active:
+                            return 2
+                return 0
+
+            def ov_after_cancel(r2: int, t2: float, was_cpu: bool,
+                                reason: int) -> None:
+                """A queued copy was just shed (state already flipped to
+                ``_CANCELLED`` and its queue accounting settled): when a
+                sibling copy is still racing, only the copy dies; else the
+                request itself is shed."""
+                nonlocal ov_shed, ov_cc, end_t
+                sib = ds_l[r2] if was_cpu else cs_l[r2]
+                if sib == _QUEUED or sib == _RUNNING \
+                        or winner_l[r2] >= 0 or dead_l[r2]:
+                    ov_cc += 1
+                    return
+                dead_l[r2] = 1
+                ov_shed += 1
+                ov_shed_by[reason] += 1
+                ov_shed_cls[0 if accel_l[r2] else 1] += 1
+                if mt:
+                    ov_ten_shed[ten_l[r2]] += 1
+                if t2 > end_t:
+                    end_t = t2
+
+            def ov_drop_incoming(r2: int, t2: float) -> None:
+                """Bounded-queue overflow with ``drop="incoming"``: the
+                arriving/retried copy is never enqueued and the request is
+                shed on the spot (callers rule out racing siblings)."""
+                nonlocal ov_shed, end_t
+                dead_l[r2] = 1
+                ov_shed += 1
+                ov_shed_by[0] += 1
+                ov_shed_cls[0 if accel_l[r2] else 1] += 1
+                if mt:
+                    ov_ten_shed[ten_l[r2]] += 1
+                if t2 > end_t:
+                    end_t = t2
+
+            def ov_evict_drive(d2: int, t2: float) -> None:
+                """Shed the oldest live queued copy on drive ``d2`` to
+                make room (``drop="oldest"`` overflow)."""
+                nonlocal t_tomb
+                dq2 = d_queues[d2]
+                while dq2:
+                    v = dq2.popleft()
+                    if ds_l[v] == _CANCELLED:
+                        t_tomb += 1
+                        continue
+                    d_area[d2] += d_qd[d2] * (t2 - d_last[d2])
+                    d_last[d2] = t2
+                    d_qd[d2] -= 1
+                    ds_l[v] = _CANCELLED
+                    if mt:
+                        tacct_d(ten_l[v], t2, -1)
+                    ov_after_cancel(v, t2, False, 0)
+                    return
+
+            def ov_evict_cpu(node2: int, t2: float) -> None:
+                nonlocal t_tomb
+                cq2 = c_queues[node2]
+                while cq2:
+                    v = cq2.popleft()
+                    if cs_l[v] == _CANCELLED:
+                        t_tomb += 1
+                        continue
+                    c_area[node2] += c_qd[node2] * (t2 - c_last[node2])
+                    c_last[node2] = t2
+                    c_qd[node2] -= 1
+                    load2 = c_load[node2] - 1; c_load[node2] = load2
+                    hpush(loadheap, (load2, node2))
+                    cs_l[v] = _CANCELLED
+                    if mt:
+                        tacct_c(ten_l[v], t2, -1)
+                    ov_after_cancel(v, t2, True, 0)
+                    return
+
+            def ov_shed_dispatch(r2: int, t2: float, cpu: bool,
+                                 srv: int) -> int:
+                """Dispatch-time shedding for the copy about to start
+                service: deadline-hopeless first (even a zero-wait start
+                cannot meet the request's deadline, judged against the
+                deterministic service-time floor), then head-age CoDel
+                (the dequeued copy's age stayed above target for a full
+                interval; at most one shed per interval per server).
+                Returns the shed_by reason index, or 0 to serve."""
+                if shp_hope:
+                    c2 = (coef_c if cpu else coef_d)[picks_l[r2]]
+                    if t2 + c2[0] > times[r2] + timeout_s:
+                        return 1
+                if codel_t is not None:
+                    first = codel_c if cpu else codel_d
+                    age = t2 - times[r2]
+                    if age > codel_t:
+                        f0 = first[srv]
+                        if f0 < 0.0:
+                            first[srv] = t2
+                        elif t2 - f0 >= codel_i:
+                            first[srv] = t2
+                            return 2
+                    else:
+                        first[srv] = -1.0
+                return 0
 
         # -- dispatch helpers ------------------------------------------------
         if tier_on:
@@ -968,6 +1223,16 @@ class ClusterEngine:
                     t_tomb += 1
                     continue
                 assert st == _QUEUED, "only queued copies may start service"
+                if ov_disp:
+                    why2 = ov_shed_dispatch(r2, t, False, d)
+                    if why2:
+                        d_area[d] += d_qd[d] * (t - d_last[d]); d_last[d] = t
+                        d_qd[d] -= 1
+                        ds_l[r2] = _CANCELLED
+                        if mt:
+                            tacct_d(ten_l[r2], t, -1)
+                        ov_after_cancel(r2, t, False, why2)
+                        continue
                 d_area[d] += d_qd[d] * (t - d_last[d]); d_last[d] = t
                 d_qd[d] -= 1
                 ds_l[r2] = _RUNNING
@@ -1004,6 +1269,19 @@ class ClusterEngine:
                     t_tomb += 1
                     continue
                 assert st == _QUEUED, "only queued copies may start service"
+                if ov_disp:
+                    why2 = ov_shed_dispatch(r2, t, True, node)
+                    if why2:
+                        c_area[node] += c_qd[node] * (t - c_last[node])
+                        c_last[node] = t
+                        c_qd[node] -= 1
+                        load2 = c_load[node] - 1; c_load[node] = load2
+                        hpush(loadheap, (load2, node))
+                        cs_l[r2] = _CANCELLED
+                        if mt:
+                            tacct_c(ten_l[r2], t, -1)
+                        ov_after_cancel(r2, t, True, why2)
+                        continue
                 c_area[node] += c_qd[node] * (t - c_last[node])
                 c_last[node] = t
                 c_qd[node] -= 1
@@ -1030,7 +1308,7 @@ class ClusterEngine:
                 return
 
         def issue_cpu(rid: int, t: float) -> None:
-            nonlocal s_i, c_busy_s
+            nonlocal s_i, c_busy_s, ov_cc
             # least-loaded *active* CPU node, lowest index on ties: lazy
             # indexed heap (inactive nodes' entries are popped on sight; an
             # active node always holds its current entry — pushed on every
@@ -1042,6 +1320,19 @@ class ClusterEngine:
                         and (not fa or c_alive[node]):
                     break
                 hpop(loadheap)          # stale, deactivated or dead entry
+            if ov_maxq is not None and c_qd[node] >= ov_maxq \
+                    and (c_busy[node] or c_queues[node]):
+                # bounded CPU queue: shed the oldest live copy to make
+                # room, or drop the incoming copy itself.  A dropped
+                # hedge/detect copy leaves its DSCS sibling racing (copy-
+                # level loss); a dropped primary copy sheds the request.
+                if ov_incoming:
+                    if ds_l[rid] == _QUEUED or ds_l[rid] == _RUNNING:
+                        ov_cc += 1
+                    else:
+                        ov_drop_incoming(rid, t)
+                    return
+                ov_evict_cpu(node, t)
             c_node_l[rid] = node
             load += 1; c_load[node] = load
             hpush(loadheap, (load, node))
@@ -1104,7 +1395,17 @@ class ClusterEngine:
                 live: grant a retry (backoff delay on the heap) under the
                 policy + budget, or abandon the request."""
                 nonlocal f_retry_sched, f_aband, f_budget_deny, \
-                    rb_granted, end_t
+                    rb_granted, end_t, ov_retry_deny
+                if ov_gate_on and ov_admit(rid2, t):
+                    # retries consult the same admission gate as fresh
+                    # arrivals, so backoff cannot storm a pushed-back or
+                    # token-exhausted fleet: the denied retry abandons
+                    ov_retry_deny += 1
+                    dead_l[rid2] = 1
+                    f_aband += 1
+                    if t > end_t:
+                        end_t = t
+                    return
                 att = att_l[rid2] + 1
                 att_l[rid2] = att
                 delay = None
@@ -1156,6 +1457,11 @@ class ClusterEngine:
                 if d < 0:
                     degrade(rid2, t)
                     return
+                if ov_maxq is not None and d_qd[d] >= ov_maxq:
+                    if ov_incoming:
+                        ov_drop_incoming(rid2, t)
+                        return
+                    ov_evict_drive(d, t)
                 f_redisp += 1
                 drive_l[rid2] = d
                 ds_l[rid2] = _QUEUED
@@ -1332,6 +1638,48 @@ class ClusterEngine:
             fault_t = ftl[fi][0] if fi < fn else INF
             dlt = dl_dq[0][0] if dl_dq else INF
             dtt = det_dq[0][0] if det_dq else INF
+            if ov_t <= ft and ov_t <= ht and ov_t < ep_t and \
+                    ov_t <= mig_t and ov_t <= fault_t and ov_t <= dlt and \
+                    ov_t <= dtt and ov_t < next_t and \
+                    (next_t != INF or heap or hedge_dq):
+                # overload control epoch: derive the pushback factor and
+                # the brownout state from the live queue depth per active
+                # server.  Same-time autoscale epochs win the tie (strict
+                # ov_t < ep_t), arrivals win against both, and the epoch
+                # stream stops once the fleet has drained.
+                t = ov_t
+                ov_epochs += 1
+                active = n_d_on + n_c_active
+                depth = ((sum(d_qd) + sum(c_qd)) / active
+                         if active else 0.0)
+                if bp is not None:
+                    f2 = 1.0
+                    if depth > bp.target_depth:
+                        f2 = bp.target_depth / depth
+                        if f2 < bp.min_factor:
+                            f2 = bp.min_factor
+                    if f2 != push_f:
+                        push_f = f2
+                        push_tl.append((t, f2))
+                if bro is not None:
+                    if bro_active:
+                        if depth <= bro.off_depth:
+                            bro_active = False
+                            bro_ivals.append((bro_since, t))
+                            bro_above = 0
+                        else:
+                            bro_ep_act += 1
+                    elif depth >= bro.on_depth:
+                        bro_above += 1
+                        if bro_above >= bro.min_epochs:
+                            bro_active = True
+                            bro_entered += 1
+                            bro_since = t
+                            bro_ep_act += 1
+                    else:
+                        bro_above = 0
+                ov_t += ov_ep_s
+                continue
             if ep_t <= ft and ep_t <= ht and ep_t <= mig_t and \
                     ep_t <= fault_t and ep_t <= dlt and ep_t <= dtt and \
                     ep_t < next_t and (next_t != INF or heap or hedge_dq):
@@ -1358,8 +1706,11 @@ class ClusterEngine:
                     n_cpu_active=n_c_active, n_dscs_on=n_d_on,
                     n_cpu_total=nc, n_dscs_total=nd,
                     tenant_queue=snap_tq, tenant_arrivals=snap_ta,
-                    tenant_completions=snap_tc))
+                    tenant_completions=snap_tc,
+                    rejected=ov_rej - ep_last_rej,
+                    shed=ov_shed - ep_last_shed, pushback=push_f))
                 ep_last_ai, ep_last_done = ai, done
+                ep_last_rej, ep_last_shed = ov_rej, ov_shed
                 if act is not None:
                     # CPU pool: activate lowest-index first / deactivate
                     # highest-index first (deterministic); a deactivated
@@ -1676,9 +2027,17 @@ class ClusterEngine:
                             and (not fa or cs_l[rid] == _FREE):
                         # under faults a detection hedge may already have
                         # issued the CPU copy; never issue a third
-                        hedged_l[rid] = True
-                        t_hedge += 1
-                        issue_cpu(rid, t)
+                        if bro_active:
+                            # brownout: hedging suspended under sustained
+                            # overload — the request degrades to the
+                            # single-copy path.  (Failure-*detection*
+                            # hedges stay active: they rescue stuck
+                            # requests rather than shave tails.)
+                            ov_hedge_sup += 1
+                        else:
+                            hedged_l[rid] = True
+                            t_hedge += 1
+                            issue_cpu(rid, t)
                     continue
             elif ft < next_t:           # a dynamic event fires
                 t, code = hpop(heap)
@@ -1912,6 +2271,37 @@ class ClusterEngine:
             rid = ai
             if mt:
                 tarr[ten_l[rid]] += 1
+            if ov_on:
+                # admission control fires before placement, deadlines and
+                # hedging: a rejected arrival consumes no queue slot, no
+                # sampler draw and no timer
+                why = ov_admit(rid, t) if ov_gate_on else 0
+                if why:
+                    ov_rej += 1
+                    if why == 1:
+                        ov_rej_push += 1
+                    else:
+                        ov_rej_adm += 1
+                    ov_rej_cls[0 if accel_l[rid] else 1] += 1
+                    if mt:
+                        ov_ten_rej[ten_l[rid]] += 1
+                    dead_l[rid] = 1
+                    if t > end_t:
+                        end_t = t
+                    ai += 1
+                    if ai < n:
+                        if ai == limit:
+                            base = ai
+                            limit = min(n, ai + _CHUNK)
+                            times_l = times[ai:limit].tolist()
+                        next_t = times_l[ai - base]
+                    else:
+                        next_t = INF
+                    continue
+                ov_admitted += 1
+                ov_adm_cls[0 if accel_l[rid] else 1] += 1
+                if mt:
+                    ov_ten_adm[ten_l[rid]] += 1
             if timeout_s is not None:
                 dl_dq.append((t + timeout_s, rid))
             if accel_l[rid]:
@@ -1972,6 +2362,24 @@ class ClusterEngine:
                     else:
                         next_t = INF
                     continue
+                if ov_maxq is not None and d_qd[d] >= ov_maxq:
+                    # bounded drive queue: make room by shedding the
+                    # oldest live queued copy, or drop the arrival itself
+                    # (before any hedge/detect timer is enqueued)
+                    if ov_incoming:
+                        ds_l[rid] = _CANCELLED
+                        ov_drop_incoming(rid, t)
+                        ai += 1
+                        if ai < n:
+                            if ai == limit:
+                                base = ai
+                                limit = min(n, ai + _CHUNK)
+                                times_l = times[ai:limit].tolist()
+                            next_t = times_l[ai - base]
+                        else:
+                            next_t = INF
+                        continue
+                    ov_evict_drive(d, t)
                 t_ddisp += 1
                 if hedge is not None:
                     hedge_dq.append((t + hedge, rid))
@@ -2095,7 +2503,10 @@ class ClusterEngine:
             "wake_events": t_wake, "epochs": ep_idx}
 
         # -- fault & deadline telemetry --------------------------------------
-        if fa or timeout_s is not None:
+        # surfaced whenever any of faults / timeout / overload is enabled:
+        # a timeout- or overload-only run must not silently lose its
+        # abandonment and rejection counts just because no FaultPlan is set
+        if fa or timeout_s is not None or ov_on:
             completed = t_srv_d + t_srv_c + t_won_d + t_won_c
             if fa:
                 for d in range(nd):
@@ -2120,6 +2531,8 @@ class ClusterEngine:
                                 "budget_denied": f_budget_deny},
                     "abandoned": f_aband,
                     "deadline_abandoned": t_dead,
+                    "rejected": ov_rej,
+                    "shed": ov_shed,
                     "degraded": f_degraded,
                     "detect_hedges": f_detect,
                     "unavailability": {"per_drive_s": list(d_down_s),
@@ -2142,13 +2555,63 @@ class ClusterEngine:
             else:
                 self._fstate = {
                     "enabled": False,
+                    "abandoned": 0,
                     "deadline_abandoned": t_dead,
+                    "rejected": ov_rej,
+                    "shed": ov_shed,
                     "goodput": {"offered": n, "completed": completed,
                                 "goodput_frac": (completed / n
                                                  if n else 0.0)},
                 }
             if t_dead:
                 self.telemetry.inc("deadline_abandoned", t_dead)
+
+        # -- overload-control telemetry --------------------------------------
+        if ov_on:
+            if bro_active:
+                bro_ivals.append((bro_since, end_t))
+            self._ovstate = {
+                "enabled": True,
+                "admitted": ov_admitted,
+                "rejected": ov_rej,
+                "shed": ov_shed,
+                "copies_cancelled": ov_cc,
+                "rejected_by": {"pushback": ov_rej_push,
+                                "admission": ov_rej_adm},
+                "shed_by": {"bounded": ov_shed_by[0],
+                            "hopeless": ov_shed_by[1],
+                            "codel": ov_shed_by[2]},
+                "per_class": {
+                    "accel": {"admitted": ov_adm_cls[0],
+                              "rejected": ov_rej_cls[0],
+                              "shed": ov_shed_cls[0]},
+                    "plain": {"admitted": ov_adm_cls[1],
+                              "rejected": ov_rej_cls[1],
+                              "shed": ov_shed_cls[1]},
+                },
+                "per_tenant": ({
+                    "names": [ten.name for ten in tenants],
+                    "admitted": ov_ten_adm,
+                    "rejected": ov_ten_rej,
+                    "shed": ov_ten_shed,
+                } if mt else None),
+                "retries_denied": ov_retry_deny,
+                "hedges_suppressed": ov_hedge_sup,
+                "brownout": {"entered": bro_entered,
+                             "active_epochs": bro_ep_act,
+                             "intervals": bro_ivals},
+                "pushback": {"timeline": push_tl, "final": push_f},
+                "epochs": ov_epochs,
+                "goodput": {"offered": n, "completed": completed,
+                            "goodput_frac": (completed / n
+                                             if n else 0.0)},
+            }
+            for nm2, v2 in (("overload_rejected", ov_rej),
+                            ("overload_shed", ov_shed),
+                            ("overload_retries_denied", ov_retry_deny),
+                            ("overload_hedges_suppressed", ov_hedge_sup)):
+                if v2:
+                    self.telemetry.inc(nm2, v2)
 
         # -- per-tenant telemetry (finalized to the common horizon) ----------
         if mt:
@@ -2261,7 +2724,9 @@ class ClusterEngine:
                     timeout_s: Optional[float] = None,
                     epoch_count: int = 64,
                     mailbox_capacity: Optional[int] = None,
-                    backend: str = "segmented") -> EngineTrace:
+                    backend: str = "segmented",
+                    overload: Optional[OverloadControl] = None
+                    ) -> EngineTrace:
         """Run the fleet sharded by drive partition across workers.
 
         ``n_shards=1`` runs the classic event loop — byte-for-byte the
@@ -2284,14 +2749,14 @@ class ClusterEngine:
         if n_shards == 1:
             return self.run_soa(pipelines, arrivals=arrivals,
                                 duration_s=duration_s, times=times,
-                                timeout_s=timeout_s)
+                                timeout_s=timeout_s, overload=overload)
         from repro.core.sharding import run_partitioned
         return run_partitioned(self, pipelines, arrivals=arrivals,
                                duration_s=duration_s, times=times,
                                n_shards=n_shards, processes=processes,
                                timeout_s=timeout_s, epoch_count=epoch_count,
                                mailbox_capacity=mailbox_capacity,
-                               backend=backend)
+                               backend=backend, overload=overload)
 
     # -- telemetry -----------------------------------------------------------
     def queue_stats(self) -> Dict[str, Dict[str, float]]:
@@ -2365,10 +2830,30 @@ class ClusterEngine:
         horizon and their ``total_s``), ``repair``
         (``bytes``/``seconds``/``jobs``/``objects`` re-replicated), and
         ``goodput`` (``offered``/``completed``/``goodput_frac``).  With
-        only ``timeout_s``, the dict carries ``deadline_abandoned`` and
+        only ``timeout_s`` (or an overload layer), the dict carries
+        ``abandoned``/``deadline_abandoned``/``rejected``/``shed`` and
         ``goodput``.
         """
         return self._fstate
+
+    def overload_stats(self) -> Optional[Dict[str, object]]:
+        """Overload-control telemetry from the last run (``None`` when no
+        :class:`~repro.core.overload.OverloadControl` was active).
+
+        Keys: ``admitted``/``rejected``/``shed`` request counts with
+        ``rejected_by`` (``pushback``/``admission``) and ``shed_by``
+        (``bounded``/``hopeless``/``codel``) breakdowns;
+        ``copies_cancelled`` (copy-level sheds whose request survived on a
+        sibling copy); ``per_class`` (accel/plain) and ``per_tenant``
+        books; ``retries_denied`` (retry attempts refused by the admission
+        gate) and ``hedges_suppressed`` (hedge timers swallowed by
+        brownout); ``brownout`` (``entered``/``active_epochs`` and the
+        ``(start, stop)`` ``intervals``); ``pushback`` (the ``(t, factor)``
+        change ``timeline`` — replayable open-loop through
+        :class:`~repro.core.overload.ThrottledArrivals` — and the
+        ``final`` factor); ``epochs``; and ``goodput``.
+        """
+        return self._ovstate
 
     def tenant_stats(self) -> Optional[Dict[str, object]]:
         """Per-tenant telemetry from the last multi-tenant run (``None``

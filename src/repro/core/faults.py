@@ -353,10 +353,13 @@ def merge_fault_stats(states: List[Optional[dict]],
     goodput = {"offered": offered, "completed": completed,
                "goodput_frac": completed / offered if offered else 0.0}
     dead = sum(s["deadline_abandoned"] for s in live)
+    rejected = sum(s.get("rejected", 0) for s in live)
+    shed = sum(s.get("shed", 0) for s in live)
     full = [s for s in live if s["enabled"]]
     if not full:
-        return {"enabled": False, "deadline_abandoned": dead,
-                "goodput": goodput}
+        return {"enabled": False, "abandoned": 0,
+                "deadline_abandoned": dead, "rejected": rejected,
+                "shed": shed, "goodput": goodput}
     per_drive: List[float] = []
     for s in live:
         per_drive += s["unavailability"]["per_drive_s"] if s["enabled"] else []
@@ -369,6 +372,8 @@ def merge_fault_stats(states: List[Optional[dict]],
                     for k in full[0]["retries"]},
         "abandoned": sum(s["abandoned"] for s in full),
         "deadline_abandoned": dead,
+        "rejected": rejected,
+        "shed": shed,
         "degraded": sum(s["degraded"] for s in full),
         "detect_hedges": sum(s["detect_hedges"] for s in full),
         "unavailability": {"per_drive_s": per_drive,

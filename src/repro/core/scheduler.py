@@ -33,6 +33,12 @@ the engine's event loop:
     backoff under a budget, replica repair, timeout-based failure
     detection — scored by ``fault_stats()`` and studied in fig23; the
     fault API is re-exported here
+  * overload control: ``ClusterSim(overload=OverloadControl(...))``
+    attaches the deterministic admission / load-shedding / backpressure /
+    brownout layer from :mod:`repro.core.overload` that keeps goodput
+    near capacity past the saturation knee instead of collapsing into a
+    retry storm — scored by ``overload_stats()`` and studied in fig24;
+    the overload API is re-exported here
 
 Every run is reproducible from the constructor seed: repeated ``run``
 calls on one ``ClusterSim`` (and two sims built with equal seeds) produce
@@ -58,6 +64,9 @@ from repro.core.faults import (CpuCrash, DriveFailure,  # noqa: F401
                                RetryBudget, RetryPolicy)
 from repro.core.function import Pipeline
 from repro.core.latency import LatencyModel
+from repro.core.overload import (AdmitAll, Backpressure,  # noqa: F401
+                                 Brownout, OverloadControl, QueueThreshold,
+                                 ShedPolicy, ThrottledArrivals, TokenBucket)
 from repro.core.placement import StoragePool
 from repro.core.tenancy import (DriveScheduler,  # noqa: F401
                                 FCFSRunToCompletion, SpatialPartition,
@@ -68,15 +77,18 @@ from repro.core.sharding import (MailboxOverflow, ShardMailbox,  # noqa: F401
 from repro.core.tiering import (DriveCache, MigrationPolicy,  # noqa: F401
                                 TierConfig)
 
-__all__ = ["AutoscaleAction", "AutoscalePolicy", "AutoscaleReport",
-           "ClusterSim", "CpuCrash", "DriveCache", "DriveFailure",
-           "DriveScheduler", "DriveStall", "EWMAPolicy",
-           "ExponentialBackoff", "FCFSRunToCompletion", "FaultPlan",
-           "FixedRetry", "FleetSnapshot", "MailboxOverflow",
-           "MigrationPolicy", "NoRetry", "ReactivePolicy", "RepairModel",
-           "RequestResult", "RetryBudget", "RetryPolicy", "ShardMailbox",
-           "ShardPlan", "SpatialPartition", "StaticPolicy", "Telemetry",
-           "TenantReport", "TenantSpec", "TierConfig", "WeightedTimeSlice",
+__all__ = ["AdmitAll", "AutoscaleAction", "AutoscalePolicy",
+           "AutoscaleReport", "Backpressure", "Brownout", "ClusterSim",
+           "CpuCrash", "DriveCache", "DriveFailure", "DriveScheduler",
+           "DriveStall", "EWMAPolicy", "ExponentialBackoff",
+           "FCFSRunToCompletion", "FaultPlan", "FixedRetry",
+           "FleetSnapshot", "MailboxOverflow", "MigrationPolicy",
+           "NoRetry", "OverloadControl", "QueueThreshold",
+           "ReactivePolicy", "RepairModel", "RequestResult",
+           "RetryBudget", "RetryPolicy", "ShardMailbox", "ShardPlan",
+           "ShedPolicy", "SpatialPartition", "StaticPolicy", "Telemetry",
+           "TenantReport", "TenantSpec", "ThrottledArrivals",
+           "TierConfig", "TokenBucket", "WeightedTimeSlice",
            "WorstTenantPolicy", "jain_index", "tenant_reports"]
 
 
@@ -89,7 +101,8 @@ class ClusterSim:
                  latency_model: Optional[LatencyModel] = None,
                  hedge_budget_s: Optional[float] = None, seed: int = 0,
                  tier: Optional[TierConfig] = None,
-                 faults: Optional[FaultPlan] = None):
+                 faults: Optional[FaultPlan] = None,
+                 overload: Optional[OverloadControl] = None):
         self.lm = latency_model or LatencyModel(seed=seed)
         self.pool = StoragePool(n_plain=64, n_dscs=n_dscs)
         self.n_dscs = n_dscs
@@ -98,11 +111,13 @@ class ClusterSim:
         self.seed = seed
         self.tier = tier
         self.faults = faults
+        self.overload = overload
         self.telemetry = Telemetry()
         self.engine = ClusterEngine(
             n_dscs=n_dscs, n_cpu=n_cpu, latency_model=self.lm,
             hedge_budget_s=hedge_budget_s, seed=seed,
-            telemetry=self.telemetry, tier=tier, faults=faults)
+            telemetry=self.telemetry, tier=tier, faults=faults,
+            overload=overload)
 
     def run(self, pipelines: List[Pipeline], *, rps: Optional[float] = None,
             duration_s: float = 120.0,
@@ -174,6 +189,14 @@ class ClusterSim:
         when the sim was built without an enabled
         :class:`~repro.core.tiering.TierConfig`)."""
         return self.engine.tier_stats()
+
+    def overload_stats(self):
+        """Overload-control telemetry from the most recent run (``None``
+        when the sim was built without an enabled
+        :class:`~repro.core.overload.OverloadControl`): admitted /
+        rejected / shed counts split by cause, class and tenant, the
+        pushback timeline, brownout intervals and goodput."""
+        return self.engine.overload_stats()
 
     # -- multi-tenancy (ROADMAP item; see repro.core.tenancy) ----------------
     def run_tenants(self, tenants: Sequence[TenantSpec], *,

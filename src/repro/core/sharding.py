@@ -40,7 +40,8 @@ per-request draws, consistent-hash CPU routing, and hedge losers running
 to completion without queue-tombstone feedback.  On a single drive with
 no hedging the two models coincide draw-for-draw.
 
-**Shard-isolated fallback** (faults, tiering, or a deadline): each shard
+**Shard-isolated fallback** (faults, tiering, a deadline, or overload
+control): each shard
 runs the full classic event loop on its own sub-fleet — tier replica
 sets are built shard-local over the shard's drives and fault timelines
 are drawn from the shard's own seed child, so no routing ever crosses a
@@ -56,7 +57,8 @@ from __future__ import annotations
 import math
 import multiprocessing as mp
 import os
-from dataclasses import dataclass
+import warnings
+from dataclasses import dataclass, replace
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -64,6 +66,7 @@ import numpy as np
 from repro.core import lindley
 from repro.core.faults import merge_fault_stats
 from repro.core.function import Pipeline, is_acceleratable
+from repro.core.overload import TokenBucket, merge_overload_stats
 from repro.core.platforms import CPU_FALLBACK_PLATFORM, DSCS_PLATFORM
 from repro.core.tiering import merge_tier_stats
 
@@ -569,6 +572,7 @@ def _run_partitioned_pure(engine, pipelines, times, plan: ShardPlan,
     engine._tstate = None
     engine._fstate = None
     engine._tierstate = None
+    engine._ovstate = None
     engine.last_shard_stats = {
         "n_shards": k, "processes": processes,
         "mailbox": {"posted": mailbox.posted,
@@ -610,16 +614,39 @@ def _fallback_worker(s: int) -> dict:
         hedge_budget_s=st["hedge"], seed=plan.shard_seeds[s],
         n_plain=st["n_plain"], dscs_wake_s=st["dscs_wake_s"],
         preempt_losers=st["preempt_losers"], tier=st["tier"],
-        faults=st["faults"])
+        faults=st["faults"], overload=st["overload"][s])
     tr = sub.run_soa(st["pipelines"], times=st["times"][rids],
                      timeout_s=st["timeout_s"])
     return {"trace": tr, "qstate": sub._qstate, "pstate": sub._pstate,
             "fstate": sub._fstate, "tierstate": sub._tierstate,
+            "ovstate": sub._ovstate,
             "counters": dict(sub.telemetry.counters)}
 
 
+def _shard_overload(ov, rids, n: int) -> list:
+    """Per-shard overload configs for the isolated fallback: each shard
+    runs its own control loop over its sub-fleet, so a fleet-wide
+    :class:`TokenBucket` rate/burst is scaled by the shard's arrival
+    share (depth-relative policies — thresholds, shedding, backpressure,
+    brownout — carry over unchanged)."""
+    if ov is None:
+        return [None] * len(rids)
+    out = []
+    for ix in rids:
+        adm = ov.admission
+        if isinstance(adm, TokenBucket) and n:
+            frac = len(ix) / n
+            out.append(replace(ov, admission=replace(
+                adm, rate=adm.rate * frac,
+                burst=max(1.0, adm.burst * frac))))
+        else:
+            out.append(ov)
+    return out
+
+
 def _run_shard_isolated(engine, pipelines, times, plan: ShardPlan,
-                        processes: int, timeout_s: Optional[float]):
+                        processes: int, timeout_s: Optional[float],
+                        overload=None):
     from repro.core.engine import EngineTrace, _placement
     global _FORK_STATE
     n = int(times.size)
@@ -632,7 +659,8 @@ def _run_shard_isolated(engine, pipelines, times, plan: ShardPlan,
         "lm": engine.lm, "hedge": engine.hedge_budget_s,
         "n_plain": engine.n_plain, "dscs_wake_s": engine.dscs_wake_s,
         "preempt_losers": engine.preempt_losers, "tier": engine.tier,
-        "faults": engine.faults, "timeout_s": timeout_s}
+        "faults": engine.faults, "timeout_s": timeout_s,
+        "overload": _shard_overload(overload, rids, n)}
     try:
         results = _map_shards(_fallback_worker, list(range(k)), processes)
     finally:
@@ -703,6 +731,8 @@ def _run_shard_isolated(engine, pipelines, times, plan: ShardPlan,
         [res["fstate"] for res in results], offered=n)
     engine._tierstate = merge_tier_stats(
         [res["tierstate"] for res in results])
+    engine._ovstate = merge_overload_stats(
+        [res["ovstate"] for res in results])
     engine.last_shard_stats = {"n_shards": k, "processes": processes,
                                "mailbox": None, "cross_shard_hedges": 0,
                                "path": "shard-isolated"}
@@ -721,7 +751,8 @@ def run_partitioned(engine, pipelines: Optional[Sequence[Pipeline]], *,
                     timeout_s: Optional[float] = None,
                     epoch_count: int = 64,
                     mailbox_capacity: Optional[int] = None,
-                    backend: str = "segmented"):
+                    backend: str = "segmented",
+                    overload=None):
     """Execute one sharded run (``n_shards >= 2``); see the module
     docstring for the two paths.  Called via
     :meth:`ClusterEngine.run_sharded`.
@@ -729,7 +760,15 @@ def run_partitioned(engine, pipelines: Optional[Sequence[Pipeline]], *,
     ``backend`` picks the Lindley solver on the partitioned fast path
     (:data:`repro.core.lindley.BACKENDS`: ``segmented``/``pallas``/
     ``dense`` — all bit-identical); the shard-isolated fallback runs the
-    classic event loop and ignores it.
+    classic event loop and ignores it — a non-default ``backend`` on a
+    fallback run raises a ``UserWarning`` so the Pallas/segmented knob
+    never silently does nothing.
+
+    ``overload`` (or the engine-level config) routes the run through the
+    shard-isolated fallback; each shard runs its own control loop
+    (fleet-wide :class:`TokenBucket` rates are scaled to the shard's
+    arrival share) and the per-shard books merge through
+    :func:`repro.core.overload.merge_overload_stats`.
     """
     if pipelines is None or not len(pipelines):
         raise ValueError("run_sharded needs a non-empty pipelines list "
@@ -756,8 +795,18 @@ def run_partitioned(engine, pipelines: Optional[Sequence[Pipeline]], *,
     times = np.ascontiguousarray(np.asarray(times, dtype=np.float64))
 
     tier_on = engine.tier is not None and engine.tier.enabled
-    if engine.faults is not None or tier_on or timeout_s is not None:
+    ov = overload if overload is not None else engine.overload
+    ov_on = ov is not None and ov.enabled
+    if engine.faults is not None or tier_on or timeout_s is not None \
+            or ov_on:
+        if backend != "segmented":
+            warnings.warn(
+                f"backend={backend!r} has no effect: faults/tiering/"
+                "deadline/overload runs take the shard-isolated fallback "
+                "(the classic event loop), not the Lindley fast path",
+                UserWarning, stacklevel=3)
         return _run_shard_isolated(engine, pipelines, times, plan,
-                                   processes, timeout_s)
+                                   processes, timeout_s,
+                                   overload=ov if ov_on else None)
     return _run_partitioned_pure(engine, pipelines, times, plan, processes,
                                  epoch_count, mailbox_capacity, backend)

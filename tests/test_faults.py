@@ -250,6 +250,50 @@ def test_autoscaler_power_down_charges_repair():
 
 
 # ---------------------------------------------------------------------------
+# timeout/overload-only telemetry (ISSUE 10 satellite regression)
+# ---------------------------------------------------------------------------
+
+def test_timeout_only_run_surfaces_deadline_telemetry():
+    """A run with a deadline but no FaultPlan must still expose the full
+    ``fault_stats()`` goodput schema — deadline-abandon counts and the
+    overload-layer rejection/shed counters (zero when the layer is off) —
+    in both the single-engine and the sharded-merge paths."""
+    sim = ClusterSim(n_dscs=3, n_cpu=3, seed=3)         # no FaultPlan
+    tr = _trace(sim, rate=250.0, dur=4.0, timeout_s=0.06)
+    fs = sim.fault_stats()
+    assert fs is not None and fs["enabled"] is False
+    assert fs["deadline_abandoned"] > 0
+    assert fs["abandoned"] == 0
+    assert fs["rejected"] == 0 and fs["shed"] == 0
+    assert fs["goodput"]["offered"] == tr.n
+
+    sh = ClusterSim(n_dscs=4, n_cpu=4, seed=3)
+    str_ = sh.run_sharded(PIPES, arrivals=PoissonProcess(rate=250.0),
+                          duration_s=4.0, n_shards=2, timeout_s=0.06)
+    sfs = sh.fault_stats()
+    assert sfs is not None and sfs["enabled"] is False
+    assert sfs["deadline_abandoned"] > 0
+    assert sfs["rejected"] == 0 and sfs["shed"] == 0
+    assert sfs["goodput"]["offered"] == str_.n
+
+
+def test_overload_rejections_surface_in_fault_stats():
+    """Overload-layer rejections/sheds land in ``fault_stats()`` even
+    without a FaultPlan, so goodput accounting stays exact."""
+    from repro.core.overload import OverloadControl, ShedPolicy, TokenBucket
+    ov = OverloadControl(admission=TokenBucket(rate=30.0, burst=2.0),
+                         shed=ShedPolicy(max_queue=2))
+    sim = ClusterSim(n_dscs=3, n_cpu=3, seed=3, overload=ov)
+    tr = _trace(sim, rate=250.0, dur=4.0)
+    fs = sim.fault_stats()
+    assert fs is not None and fs["rejected"] > 0
+    dead = int(np.count_nonzero(tr.winner == -1))
+    assert (fs["abandoned"] + fs["deadline_abandoned"] + fs["rejected"]
+            + fs["shed"]) == dead
+    assert fs["goodput"]["completed"] + dead == tr.n
+
+
+# ---------------------------------------------------------------------------
 # benchmarks/run.py regression + fig23 gate
 # ---------------------------------------------------------------------------
 

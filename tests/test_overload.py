@@ -1,0 +1,390 @@
+"""Overload control & metastable-failure resilience (ISSUE 10):
+admission control, load shedding, backpressure, brownout, and the fig24
+goodput-retention gate.
+
+PYTHONPATH=src python -m pytest -q tests/test_overload.py
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.arrivals import PoissonProcess
+from repro.core.autoscale import StaticPolicy
+from repro.core.faults import ExponentialBackoff, FaultPlan
+from repro.core.function import standard_pipeline
+from repro.core.overload import (AdmitAll, Backpressure, Brownout,
+                                 OverloadControl, QueueThreshold, ShedPolicy,
+                                 ThrottledArrivals, TokenBucket,
+                                 merge_overload_stats)
+from repro.core.scheduler import ClusterSim
+from repro.core.tenancy import TenantSpec, WeightedTimeSlice
+
+PIPES = [standard_pipeline("asset_damage")]
+
+
+def _sim(overload=None, **kw):
+    kw.setdefault("n_dscs", 3)
+    kw.setdefault("n_cpu", 3)
+    kw.setdefault("seed", 7)
+    return ClusterSim(overload=overload, **kw)
+
+
+def _run(sim, *, rate=120.0, dur=6.0, timeout_s=None):
+    return sim.engine.run_soa(PIPES, arrivals=PoissonProcess(rate=rate),
+                              duration_s=dur, timeout_s=timeout_s)
+
+
+def _conserved(tr, sim):
+    """arrivals == completed + abandoned + rejected + shed, exactly."""
+    fs = sim.fault_stats()
+    completed = int(np.count_nonzero(tr.completed))
+    dead = int(np.count_nonzero(tr.winner == -1))
+    assert completed + dead == tr.n
+    assert (fs["abandoned"] + fs["deadline_abandoned"] + fs["rejected"]
+            + fs["shed"]) == dead
+    return fs
+
+
+# ---------------------------------------------------------------------------
+# policy construction & validation
+# ---------------------------------------------------------------------------
+
+def test_policy_validation():
+    with pytest.raises(ValueError):
+        TokenBucket(rate=0.0).validate()
+    with pytest.raises(ValueError):
+        TokenBucket(burst=0.5).validate()
+    with pytest.raises(ValueError):
+        QueueThreshold(max_queue_per_server=None).validate()  # no criterion
+    with pytest.raises(ValueError):
+        QueueThreshold(max_utilization=1.5).validate()
+    with pytest.raises(ValueError):
+        ShedPolicy(max_queue=3, drop="youngest").validate()
+    with pytest.raises(ValueError):
+        ShedPolicy(codel_target_s=0.05, codel_interval_s=0.0).validate()
+    with pytest.raises(ValueError):
+        Backpressure(target_depth=0.0).validate()
+    with pytest.raises(ValueError):
+        Brownout(on_depth=2.0, off_depth=2.0).validate()   # needs hysteresis
+    with pytest.raises(ValueError):
+        OverloadControl(epoch_s=0.0).validate()
+    OverloadControl(admission=TokenBucket(), shed=ShedPolicy(max_queue=4),
+                    backpressure=Backpressure(),
+                    brownout=Brownout()).validate()
+
+
+def test_enabled_predicate():
+    assert not OverloadControl().enabled
+    assert not OverloadControl(admission=AdmitAll()).enabled
+    assert not OverloadControl(shed=ShedPolicy()).enabled  # no criteria set
+    assert OverloadControl(admission=TokenBucket()).enabled
+    assert OverloadControl(shed=ShedPolicy(max_queue=2)).enabled
+    assert OverloadControl(backpressure=Backpressure()).enabled
+    assert OverloadControl(brownout=Brownout()).enabled
+
+
+def test_throttled_arrivals_validation():
+    with pytest.raises(ValueError):
+        ThrottledArrivals(timeline=((1.0, 0.5),))          # no inner process
+    with pytest.raises(ValueError):
+        ThrottledArrivals(inner=PoissonProcess(rate=10.0),
+                          timeline=((1.0, 1.2),))          # factor > 1
+    with pytest.raises(ValueError):
+        ThrottledArrivals(inner=PoissonProcess(rate=10.0),
+                          timeline=((2.0, 0.5), (1.0, 0.8)))   # unsorted
+
+
+# ---------------------------------------------------------------------------
+# continuity: a disabled layer is bit-exact with the classic engine
+# ---------------------------------------------------------------------------
+
+def test_disabled_layer_bit_exact():
+    base = _run(_sim(None))
+    noop = _run(_sim(OverloadControl(admission=AdmitAll())))
+    assert np.array_equal(base.finish, noop.finish, equal_nan=True)
+    assert np.array_equal(base.winner, noop.winner)
+    assert _sim(OverloadControl()).overload_stats() is None
+
+
+def test_disabled_layer_stats_are_none():
+    sim = _sim(None)
+    _run(sim)
+    assert sim.overload_stats() is None
+
+
+# ---------------------------------------------------------------------------
+# admission control
+# ---------------------------------------------------------------------------
+
+def test_token_bucket_meters_admissions():
+    ov = OverloadControl(admission=TokenBucket(rate=20.0, burst=4.0))
+    sim = _sim(ov)
+    tr = _run(sim, rate=100.0, dur=6.0)
+    st = sim.overload_stats()
+    fs = _conserved(tr, sim)
+    assert st["rejected_by"]["admission"] == st["rejected"] > 0
+    assert st["admitted"] + st["rejected"] == tr.n
+    # admitted ~ rate * dur + burst, never more
+    assert st["admitted"] <= 20.0 * 6.0 + 4.0 + 1
+    assert fs["rejected"] == st["rejected"]
+    # rejected requests are dead in the trace
+    assert int(np.count_nonzero(tr.winner == -1)) >= st["rejected"]
+
+
+def test_queue_threshold_rejects_only_under_load():
+    ov = OverloadControl(
+        admission=QueueThreshold(max_queue_per_server=2.0))
+    calm = _sim(ov)
+    _run(calm, rate=5.0)
+    assert calm.overload_stats()["rejected"] == 0
+    hot = _sim(ov)
+    tr = _run(hot, rate=400.0)
+    st = hot.overload_stats()
+    assert st["rejected"] > 0
+    _conserved(tr, hot)
+
+
+def test_per_class_counters_partition_totals():
+    mixed = [standard_pipeline("asset_damage"),
+             standard_pipeline("asset_damage", accelerate=False)]
+    ov = OverloadControl(admission=TokenBucket(rate=30.0, burst=2.0,
+                                               per_class=True))
+    sim = _sim(ov)
+    sim.engine.run_soa(mixed, arrivals=PoissonProcess(rate=150.0),
+                       duration_s=5.0)
+    st = sim.overload_stats()
+    for key in ("admitted", "rejected", "shed"):
+        assert (st["per_class"]["accel"][key]
+                + st["per_class"]["plain"][key]) == st[key]
+    assert st["per_class"]["accel"]["rejected"] > 0
+    assert st["per_class"]["plain"]["rejected"] > 0
+
+
+# ---------------------------------------------------------------------------
+# load shedding
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("drop", ["oldest", "incoming"])
+def test_bounded_queue_sheds(drop):
+    ov = OverloadControl(shed=ShedPolicy(max_queue=2, drop=drop))
+    sim = _sim(ov)
+    tr = _run(sim, rate=300.0, dur=4.0)
+    st = sim.overload_stats()
+    assert st["shed_by"]["bounded"] == st["shed"] > 0
+    assert st["rejected"] == 0          # shedding, not admission
+    _conserved(tr, sim)
+
+
+def test_hopeless_shedding_requires_deadline():
+    ov = OverloadControl(shed=ShedPolicy(max_queue=None, hopeless=True))
+    sim = _sim(ov)
+    tr = _run(sim, rate=300.0, dur=4.0, timeout_s=0.08)
+    st = sim.overload_stats()
+    assert st["shed_by"]["hopeless"] == st["shed"] > 0
+    fs = _conserved(tr, sim)
+    # a hopeless-shed copy would have missed its deadline anyway: shedding
+    # must not reduce completions below the unprotected run
+    naked = _sim(None)
+    ntr = _run(naked, rate=300.0, dur=4.0, timeout_s=0.08)
+    assert (int(np.count_nonzero(tr.completed))
+            >= int(np.count_nonzero(ntr.completed)))
+    assert fs["deadline_abandoned"] + fs["shed"] > 0
+
+
+def test_codel_sojourn_shedding():
+    ov = OverloadControl(shed=ShedPolicy(codel_target_s=0.02,
+                                         codel_interval_s=0.05))
+    sim = _sim(ov)
+    tr = _run(sim, rate=300.0, dur=4.0)
+    st = sim.overload_stats()
+    assert st["shed_by"]["codel"] == st["shed"] > 0
+    _conserved(tr, sim)
+
+
+# ---------------------------------------------------------------------------
+# backpressure & brownout
+# ---------------------------------------------------------------------------
+
+def test_backpressure_throttles_and_records_timeline():
+    ov = OverloadControl(backpressure=Backpressure(target_depth=1.0,
+                                                   min_factor=0.1))
+    sim = _sim(ov)
+    tr = _run(sim, rate=300.0, dur=6.0)
+    st = sim.overload_stats()
+    assert st["rejected_by"]["pushback"] == st["rejected"] > 0
+    assert st["epochs"] > 0
+    tl = st["pushback"]["timeline"]
+    assert tl and min(f for _, f in tl) < 1.0
+    assert all(0.1 <= f <= 1.0 for _, f in tl)
+    _conserved(tr, sim)
+
+
+def test_brownout_suspends_hedging():
+    ov = OverloadControl(brownout=Brownout(on_depth=0.5, off_depth=0.1,
+                                           min_epochs=1))
+    hot = _sim(ov, hedge_budget_s=0.02)
+    _run(hot, rate=300.0, dur=6.0)
+    st = hot.overload_stats()
+    assert st["brownout"]["entered"] >= 1
+    assert st["hedges_suppressed"] > 0
+    assert st["brownout"]["active_epochs"] >= 1
+    for lo, hi in st["brownout"]["intervals"]:
+        assert hi > lo >= 0.0
+    # without hedging there is nothing to suppress
+    cold = _sim(ov)
+    _run(cold, rate=300.0, dur=6.0)
+    assert cold.overload_stats()["hedges_suppressed"] == 0
+
+
+def test_throttled_arrivals_thin_open_loop_stream():
+    inner = PoissonProcess(rate=200.0)
+    full = inner.times(10.0, np.random.default_rng(0))
+    # client honors a 0.5 pushback factor from t=2s on
+    th = ThrottledArrivals(inner=inner, timeline=((2.0, 0.5),))
+    thin = th.times(10.0, np.random.default_rng(0))
+    before = np.count_nonzero(thin < 2.0)
+    after = np.count_nonzero(thin >= 2.0)
+    n_before = np.count_nonzero(full < 2.0)
+    n_after = np.count_nonzero(full >= 2.0)
+    assert before == n_before                   # untouched before pushback
+    assert abs(after - 0.5 * n_after) <= 2      # deterministic accumulator
+    assert th.with_rate(50.0).inner.rate == 50.0
+
+
+# ---------------------------------------------------------------------------
+# retry integration & composition limits
+# ---------------------------------------------------------------------------
+
+def test_retries_consult_admission_state():
+    fp = FaultPlan(drive_mtbf_s=2.0, drive_mttr_s=1.0,
+                   retry=ExponentialBackoff(base_s=0.005, max_attempts=6),
+                   retry_budget=None, detect_timeout_s=0.05)
+    ov = OverloadControl(admission=TokenBucket(rate=30.0, burst=2.0))
+    sim = _sim(ov, faults=fp)
+    tr = _run(sim, rate=150.0, dur=8.0, timeout_s=0.5)
+    st = sim.overload_stats()
+    assert "retries_denied" in st and st["retries_denied"] >= 0
+    _conserved(tr, sim)
+
+
+def test_overload_rejects_non_fcfs_scheduler():
+    ov = OverloadControl(admission=TokenBucket(rate=50.0))
+    sim = _sim(ov)
+    tenants = [TenantSpec(name="a", pipelines=PIPES,
+                          arrivals=PoissonProcess(rate=20.0)),
+               TenantSpec(name="b", pipelines=PIPES,
+                          arrivals=PoissonProcess(rate=20.0))]
+    with pytest.raises(NotImplementedError):
+        sim.engine.run_soa(tenants=tenants, duration_s=2.0,
+                           scheduler=WeightedTimeSlice())
+
+
+def test_per_tenant_books_under_fcfs():
+    ov = OverloadControl(admission=TokenBucket(rate=25.0, burst=2.0))
+    sim = _sim(ov)
+    tenants = [TenantSpec(name="calm", pipelines=PIPES,
+                          arrivals=PoissonProcess(rate=10.0), weight=1.0),
+               TenantSpec(name="greedy", pipelines=PIPES,
+                          arrivals=PoissonProcess(rate=120.0), weight=1.0)]
+    sim.engine.run_soa(tenants=tenants, duration_s=6.0)
+    st = sim.overload_stats()
+    pt = st["per_tenant"]
+    assert pt is not None and pt["names"] == ["calm", "greedy"]
+    assert sum(pt["admitted"]) == st["admitted"]
+    assert sum(pt["rejected"]) == st["rejected"]
+    # the greedy tenant exhausts its own bucket, not the calm tenant's
+    assert pt["rejected"][1] > pt["rejected"][0]
+
+
+# ---------------------------------------------------------------------------
+# telemetry schema & snapshot signals
+# ---------------------------------------------------------------------------
+
+def test_overload_stats_schema():
+    ov = OverloadControl(admission=TokenBucket(rate=30.0),
+                         shed=ShedPolicy(max_queue=3, hopeless=True),
+                         backpressure=Backpressure(target_depth=2.0),
+                         brownout=Brownout(on_depth=2.5, off_depth=0.5))
+    sim = _sim(ov, hedge_budget_s=0.05)
+    _run(sim, rate=200.0, dur=5.0, timeout_s=0.4)
+    st = sim.overload_stats()
+    for key in ("enabled", "admitted", "rejected", "shed",
+                "copies_cancelled", "rejected_by", "shed_by", "per_class",
+                "per_tenant", "retries_denied", "hedges_suppressed",
+                "brownout", "pushback", "epochs", "goodput"):
+        assert key in st, key
+    assert st["enabled"] is True
+    assert set(st["rejected_by"]) == {"pushback", "admission"}
+    assert set(st["shed_by"]) == {"bounded", "hopeless", "codel"}
+    assert st["goodput"]["offered"] == st["admitted"] + st["rejected"]
+
+
+def test_fleet_snapshot_carries_rejection_and_pushback():
+    snaps = []
+
+    class Spy(StaticPolicy):
+        def observe(self, snap):
+            snaps.append(snap)
+            return super().observe(snap)
+
+    ov = OverloadControl(backpressure=Backpressure(target_depth=0.5))
+    sim = _sim(ov)
+    sim.engine.run_soa(PIPES, arrivals=PoissonProcess(rate=300.0),
+                       duration_s=5.0,
+                       controller=Spy(n_cpu=3, n_dscs_on=3, epoch_s=1.0))
+    assert snaps
+    assert sum(s.rejected for s in snaps) > 0
+    assert any(s.pushback < 1.0 for s in snaps)
+    assert all(s.shed >= 0 for s in snaps)
+
+
+# ---------------------------------------------------------------------------
+# sharded runs
+# ---------------------------------------------------------------------------
+
+def test_sharded_overload_merges_books():
+    ov = OverloadControl(admission=TokenBucket(rate=40.0, burst=8.0),
+                         shed=ShedPolicy(max_queue=4),
+                         backpressure=Backpressure(target_depth=2.0))
+    sim = ClusterSim(n_dscs=6, n_cpu=6, seed=5, overload=ov)
+    tr = sim.run_sharded(PIPES, arrivals=PoissonProcess(rate=150.0),
+                         duration_s=6.0, n_shards=2, timeout_s=0.5)
+    st = sim.overload_stats()
+    assert st is not None and st["rejected"] > 0
+    fs = _conserved(tr, sim)
+    assert fs["rejected"] == st["rejected"]
+    assert fs["shed"] == st["shed"]
+    # shard-tagged pushback timeline: (shard, t, factor) triples
+    assert all(len(ev) == 3 for ev in st["pushback"]["timeline"])
+
+
+def test_merge_overload_stats_identity():
+    assert merge_overload_stats([None, None]) is None
+    ov = OverloadControl(admission=TokenBucket(rate=30.0, burst=4.0))
+    sim = _sim(ov)
+    _run(sim, rate=150.0, dur=4.0)
+    solo = sim.overload_stats()
+    merged = merge_overload_stats([solo, None])
+    for key in ("admitted", "rejected", "shed", "copies_cancelled",
+                "retries_denied", "hedges_suppressed", "epochs"):
+        assert merged[key] == solo[key]
+    assert merged["goodput"] == solo["goodput"]
+
+
+# ---------------------------------------------------------------------------
+# fig24 gate
+# ---------------------------------------------------------------------------
+
+def test_fig24_smoke_headline_gate(monkeypatch):
+    import benchmarks.figures as figures_mod
+    monkeypatch.setattr(figures_mod, "SMOKE", True)
+    rows = figures_mod.fig24_overload()
+    by_name = {n: v for n, v, _ in rows}
+    assert by_name["fig24/headline/goodput_retention"] >= 2.0
+    # naive goodput collapses past the knee; protected degrades gracefully
+    assert (by_name["fig24/load_1.5x/naive/goodput_frac"]
+            < by_name["fig24/load_1x/naive/goodput_frac"] / 2)
+    assert (by_name["fig24/load_1.5x/protected/goodput_frac"]
+            > by_name["fig24/load_1x/protected/goodput_frac"] / 2)
+    assert by_name["fig24/load_1.5x/protected/hedges_suppressed"] > 0

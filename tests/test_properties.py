@@ -171,18 +171,24 @@ def test_rglru_state_is_contraction(b, s, w):
        st.sampled_from(["none", "fixed", "expo"]),  # retry policy
        st.booleans(),                               # repair on/off
        st.sampled_from([None, 0.2, 0.6]),           # timeout_s
-       st.sampled_from([1, 2, 4]))                  # shard count
+       st.sampled_from([1, 2, 4]),                  # shard count
+       st.sampled_from([None, "bucket", "shed", "push", "full"]))  # overload
 def test_request_conservation_under_faults(seed, k, mtbf, mttr, retry,
-                                           repair, timeout_s, n_shards):
-    """Every arrival ends exactly once — completed, abandoned, or
-    in-flight at the horizon — under arbitrary fault plans: retries never
-    double-complete a request, abandonment and completion are mutually
-    exclusive, and the served busy-seconds stay within the fleet's
-    physical capacity.  Holds under any shard count: sharded runs inject
-    shard-local faults but must keep the fleet-wide books exact."""
+                                           repair, timeout_s, n_shards,
+                                           overload):
+    """Every arrival ends exactly once — completed, abandoned, rejected,
+    or shed — under arbitrary fault plans and any overload-control mix:
+    retries never double-complete a request, the terminal states are
+    mutually exclusive, ``arrivals == completed + abandoned + rejected +
+    shed`` holds to the request, and the served busy-seconds stay within
+    the fleet's physical capacity.  Holds under any shard count: sharded
+    runs inject shard-local faults and run shard-local admission gates
+    but must keep the fleet-wide books exact."""
     from repro.core.faults import (ExponentialBackoff, FaultPlan, FixedRetry,
                                    NoRetry, RepairModel)
     from repro.core.function import standard_pipeline
+    from repro.core.overload import (Backpressure, Brownout, OverloadControl,
+                                     ShedPolicy, TokenBucket)
     from repro.core.scheduler import ClusterSim
     from repro.core.arrivals import PoissonProcess
     from repro.core.tiering import TierConfig
@@ -197,8 +203,23 @@ def test_request_conservation_under_faults(seed, k, mtbf, mttr, retry,
                "expo": ExponentialBackoff()}[retry],
         repair=RepairModel(bandwidth_bps=50e6) if repair else None,
         detect_timeout_s=0.15)
+    ov = {
+        None: None,
+        "bucket": OverloadControl(admission=TokenBucket(rate=25.0,
+                                                        burst=4.0)),
+        "shed": OverloadControl(shed=ShedPolicy(max_queue=2,
+                                                drop="incoming")),
+        "push": OverloadControl(backpressure=Backpressure(target_depth=1.0)),
+        "full": OverloadControl(
+            admission=TokenBucket(rate=30.0, burst=2.0, per_class=True),
+            shed=ShedPolicy(max_queue=3, hopeless=True,
+                            codel_target_s=0.05),
+            backpressure=Backpressure(target_depth=2.0),
+            brownout=Brownout(on_depth=1.0, off_depth=0.25, min_epochs=1)),
+    }[overload]
     sim = ClusterSim(n_dscs=n_dscs, n_cpu=n_cpu, seed=seed, faults=fp,
-                     tier=TierConfig(replication_k=k, n_objects=32))
+                     tier=TierConfig(replication_k=k, n_objects=32),
+                     overload=ov)
     tr = sim.engine.run_sharded([standard_pipeline("asset_damage")],
                                 arrivals=PoissonProcess(rate=60.0),
                                 duration_s=dur, timeout_s=timeout_s,
@@ -214,15 +235,66 @@ def test_request_conservation_under_faults(seed, k, mtbf, mttr, retry,
     assert np.all(np.isfinite(fin))
     assert np.all(tr.winner[tr.completed] >= 0)
     assert np.all(np.isnan(tr.finish[tr.winner == -1]))
-    # fault_stats agrees with the trace (goodput never double-counts)
+    # fault_stats agrees with the trace (goodput never double-counts):
+    # arrivals == completed + abandoned + rejected + shed
     assert fs["goodput"]["offered"] == tr.n
     assert fs["goodput"]["completed"] == completed
-    assert fs["abandoned"] + fs["deadline_abandoned"] == abandoned
+    assert (fs["abandoned"] + fs["deadline_abandoned"] + fs["rejected"]
+            + fs["shed"]) == abandoned
+    ost = sim.overload_stats()
+    if ov is not None:
+        assert ost["rejected"] == fs["rejected"]
+        assert ost["shed"] == fs["shed"]
+        assert ost["admitted"] + ost["rejected"] == tr.n
+    else:
+        assert ost is None
+        assert fs["rejected"] == 0 and fs["shed"] == 0
     # busy seconds can't exceed fleet capacity over the run horizon
     ps = sim.engine.power_stats()
     horizon = float(ps["horizon"])
     assert -1e-9 <= float(ps["dscs"]["busy_s"]) <= n_dscs * horizon + 1e-6
     assert -1e-9 <= float(ps["cpu"]["busy_s"]) <= n_cpu * horizon + 1e-6
+
+
+def test_metastability_admission_prevents_goodput_collapse():
+    """The metastable-failure regression (ISSUE 10): past the saturation
+    knee with exponential-backoff retries live, the unprotected fleet's
+    SLA goodput collapses below 50% of what it sustains at the knee,
+    while the admission-controlled fleet holds at least 90% of it."""
+    from repro.core.arrivals import PoissonProcess
+    from repro.core.faults import ExponentialBackoff, FaultPlan
+    from repro.core.function import standard_pipeline
+    from repro.core.overload import (Backpressure, Brownout, OverloadControl,
+                                     ShedPolicy, TokenBucket)
+    from repro.core.scheduler import ClusterSim
+
+    pipes = [standard_pipeline("asset_damage")]
+    sla_s, timeout_s, dur = 0.15, 0.5, 10.0
+    knee = ClusterSim(n_dscs=4, n_cpu=4, seed=0).max_throughput(
+        pipes, sla_s=sla_s, sla_frac=0.5, duration_s=8.0, hi=4096.0)
+    fp = FaultPlan(drive_mtbf_s=20.0, drive_mttr_s=4.0,
+                   retry=ExponentialBackoff(base_s=0.01, cap_s=0.5,
+                                            max_attempts=8),
+                   retry_budget=None, detect_timeout_s=0.2)
+    ov = OverloadControl(admission=TokenBucket(rate=0.9 * knee, burst=8.0),
+                         shed=ShedPolicy(max_queue=3, hopeless=True),
+                         backpressure=Backpressure(target_depth=1.0),
+                         brownout=Brownout(on_depth=1.2, off_depth=0.4))
+
+    def goodput_per_s(rate, overload):
+        sim = ClusterSim(n_dscs=4, n_cpu=4, seed=0, hedge_budget_s=0.05,
+                         faults=fp, overload=overload)
+        tr = sim.run(pipes, arrivals=PoissonProcess(rate=rate),
+                     duration_s=dur, timeout_s=timeout_s)
+        lat = np.array([r.latency for r in tr], dtype=float)
+        comp = lat[~np.isnan(lat)]
+        return float(np.count_nonzero(comp <= sla_s)) / dur
+
+    at_knee = goodput_per_s(knee, None)
+    storm = goodput_per_s(1.5 * knee, None)
+    held = goodput_per_s(1.5 * knee, ov)
+    assert storm < 0.5 * at_knee        # naive retry storm: collapse
+    assert held >= 0.9 * at_knee        # admission + shedding: graceful
 
 
 @settings(max_examples=60, deadline=None)

@@ -369,6 +369,23 @@ def test_fallback_timeout_only_goodput():
     assert fs["goodput"]["completed"] == int(tr.completed.sum())
 
 
+def test_fallback_warns_when_backend_is_ignored():
+    """ISSUE 10 satellite: fallback runs (faults/tiering/deadline/overload)
+    never reach the Lindley fast path, so a non-default ``backend=`` is a
+    no-op — the engine must say so instead of silently ignoring it."""
+    import warnings
+    eng = ClusterEngine(n_dscs=4, n_cpu=4, seed=2,
+                        faults=FaultPlan(drive_mtbf_s=5.0, drive_mttr_s=1.0))
+    with pytest.warns(UserWarning, match="backend='pallas' has no effect"):
+        eng.run_sharded(PIPES, arrivals=PoissonProcess(rate=50.0),
+                        duration_s=2.0, n_shards=2, backend="pallas")
+    # the default backend name stays silent on the same fallback run
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        eng.run_sharded(PIPES, arrivals=PoissonProcess(rate=50.0),
+                        duration_s=2.0, n_shards=2, backend="segmented")
+
+
 def test_tiny_run_with_empty_shards():
     """A shard that owns zero requests must not break the merge."""
     times = np.array([0.0, 0.01, 0.02])
